@@ -1,0 +1,31 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_sim(c, t_model_ms: float, cfg, key=None, warmup_ms: float = 10.0):
+    """Run the simulation twice (warmup compiles), time the second.
+
+    Returns (wall_s, rtf). RTF = T_wall / T_model (paper's measure).
+    """
+    from repro.core import simulate
+    from repro.core.engine import init_state, prepare_network
+    net = prepare_network(c, cfg)
+    state = init_state(c, key)
+    # warmup: jit compile
+    f, _, _ = simulate(c, warmup_ms, cfg, key=key, net=net, state=state)
+    jax.block_until_ready(f)
+    state = init_state(c, key)
+    t0 = time.perf_counter()
+    f, rec, _ = simulate(c, t_model_ms, cfg, key=key, net=net, state=state)
+    jax.block_until_ready(rec)
+    wall = time.perf_counter() - t0
+    return wall, wall / (t_model_ms * 1e-3), np.asarray(rec)
+
+
+def fmt_row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"

@@ -1,0 +1,43 @@
+"""LM substrate micro-benchmark: measured CPU step times at smoke scale.
+
+Not a paper table — sanity wall-clock numbers proving the train/serve paths
+execute end to end for every architecture family (the full-scale numbers
+are roofline-derived; see benchmarks/roofline.py).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import fmt_row
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.data.synthetic import token_batch
+from repro.models.model import build
+from repro.train.train_step import TrainHparams, init_train_state, \
+    make_train_step
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    for arch in ARCH_IDS:
+        cfg = get_smoke_config(arch)
+        m = build(cfg)
+        hp = TrainHparams(total_steps=10, warmup=1)
+        state, opt = init_train_state(m, m.init(key), hp)
+        step = jax.jit(make_train_step(m, opt, hp), donate_argnums=(0,))
+        batch = token_batch(cfg, 4, 32, 0)
+        state, mets = step(state, batch)          # compile
+        jax.block_until_ready(mets["loss"])
+        n = 5
+        t0 = time.perf_counter()
+        for s in range(1, n + 1):
+            state, mets = step(state, token_batch(cfg, 4, 32, s))
+        jax.block_until_ready(mets["loss"])
+        dt = (time.perf_counter() - t0) / n
+        print(fmt_row(f"lm_step/{arch}", dt * 1e6,
+                      f"loss={float(mets['loss']):.3f}"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Fig. 1b (bottom) analogue: wall-clock fraction per simulation phase.
+
+The paper instruments update / deliver / communicate with NEST's timers;
+``PhaseRunner`` reproduces that instrumentation (each phase a separately
+jitted, synchronised call).  Communicate is a no-op on one device — the
+dry-run's collective term covers it for the sharded engine.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import fmt_row
+from repro.core import SimConfig, build_connectome
+from repro.core.engine import PhaseRunner
+
+
+def run(scale: float = 0.05, steps: int = 2000, strategy: str = "event"):
+    c = build_connectome(n_scaling=scale, k_scaling=scale, seed=2)
+    cfg = SimConfig(strategy=strategy, spike_budget=256)
+    pr = PhaseRunner(c, cfg, key=jax.random.PRNGKey(0))
+    pr.step_timed({})                      # warmup/compile
+    timers = {}
+    for _ in range(steps):
+        pr.step_timed(timers)
+    total = sum(timers.values())
+    rows = []
+    for phase, t in sorted(timers.items()):
+        rows.append(fmt_row(
+            f"phase_breakdown/{strategy}/{phase}", t / steps * 1e6,
+            f"fraction={t / total:.2f}"))
+    return rows
+
+
+def main():
+    for strategy in ("event", "dense"):
+        sc = 0.05 if strategy == "event" else 0.02
+        for r in run(scale=sc, steps=500, strategy=strategy):
+            print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,143 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch x shape x mesh) cell, in seconds per step:
+
+  compute    = HLO_FLOPs_per_device / 197e12          (bf16 peak, v5e)
+  memory     = HLO_bytes_per_device / 819e9            (HBM bandwidth)
+  collective = wire_bytes_per_device / 50e9            (ICI per-link)
+
+plus MODEL_FLOPS = 6·N_active·tokens (train) or 2·N_active·tokens
+(prefill/decode) and the usefulness ratio MODEL_FLOPS / total_HLO_FLOPs
+(catches remat/redundancy waste).  The dominant term is the hillclimb target.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+HBM_BYTES = 16 * 2 ** 30
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+_TOKENS = {"train_4k": (4096, 256), "prefill_32k": (32768, 32),
+           "decode_32k": (1, 128), "long_500k": (1, 1)}
+
+
+def model_flops(cell: dict) -> float:
+    seq, batch = _TOKENS.get(cell["shape"], (1, 1))
+    tokens = seq * batch
+    n = cell.get("active_params") or cell.get("params", 0)
+    factor = 6 if cell["shape"].startswith("train") else 2
+    return factor * n * tokens
+
+
+def analyze(cell: dict) -> dict:
+    comp = cell["flops_per_device"] / PEAK_FLOPS
+    # memory traffic bounds: the HLO-derived count assumes every top-level
+    # op round-trips HBM (true on the un-fused CPU backend; a *ceiling* for
+    # TPU, which fuses elementwise chains); the floor is compulsory traffic:
+    # every argument/output byte touched once.
+    mem_ceiling = cell["bytes_accessed_per_device"] / HBM_BW
+    compulsory = (cell["memory"]["argument_bytes"]
+                  + cell["memory"]["output_bytes"])
+    mem_floor = compulsory / HBM_BW
+    coll = cell["collective_wire_bytes_per_device"] / ICI_BW
+    terms_opt = {"compute": comp, "memory": mem_floor, "collective": coll}
+    terms_pes = {"compute": comp, "memory": mem_ceiling, "collective": coll}
+    dominant = max(terms_pes, key=terms_pes.get)
+    total_hlo = cell["flops_per_device"] * cell["n_devices"]
+    mf = model_flops(cell)
+    # subtract phantom f32 weight copies inserted by the CPU backend for
+    # bf16 dots (hoisted out of scans); absent on TPU's native-bf16 MXU
+    promo = cell.get("cpu_bf16_promotion_bytes", 0.0)
+    mem_bytes = (cell["memory"]["argument_bytes"]
+                 + cell["memory"]["temp_bytes"]
+                 + cell["memory"]["output_bytes"]
+                 - cell["memory"]["alias_bytes"]
+                 - promo)
+    lo = max(terms_opt.values())
+    hi = max(terms_pes.values())
+    return {
+        **{k: cell[k] for k in ("arch", "shape", "mesh", "n_devices")},
+        "compute_s": comp, "memory_floor_s": mem_floor,
+        "memory_ceiling_s": mem_ceiling, "collective_s": coll,
+        "dominant": dominant,
+        "step_bound_s": (lo, hi),
+        "step_lower_bound_s": lo,
+        "model_flops": mf,
+        "useful_flops_ratio": (mf / total_hlo) if total_hlo else 0.0,
+        "mfu_bound": (mf / (cell["n_devices"] * PEAK_FLOPS * hi) if hi else 0,
+                      mf / (cell["n_devices"] * PEAK_FLOPS * lo) if lo else 0),
+        "bytes_per_device": mem_bytes,
+        "fits_hbm": mem_bytes <= HBM_BYTES,
+    }
+
+
+def hint(r: dict) -> str:
+    if r["dominant"] == "collective":
+        return ("collective-bound: reduce resharding (fuse constraints, "
+                "bigger per-device blocks) or overlap collectives with "
+                "compute")
+    if r["dominant"] == "memory":
+        if r["useful_flops_ratio"] < 0.5:
+            return ("memory-bound with low useful-FLOP ratio: cut remat "
+                    "recompute and intermediate materialisation (fusion)")
+        return ("memory-bound: increase arithmetic intensity (larger "
+                "per-device tiles, bf16 weights, fewer passes over params)")
+    if r["useful_flops_ratio"] < 0.5:
+        return "compute-bound but wasteful: remove redundant/padded FLOPs"
+    return "compute-bound and useful: near roofline, little headroom"
+
+
+def load_cells(mesh: Optional[str] = "pod1") -> List[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(ART_DIR, "*.json"))):
+        with open(path) as f:
+            c = json.load(f)
+        if mesh is None or c.get("mesh") == mesh:
+            cells.append(c)
+    return cells
+
+
+def report(mesh: str = "pod1") -> List[dict]:
+    rows = [analyze(c) for c in load_cells(mesh)]
+    return rows
+
+
+def markdown_table(rows: List[dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s (floor..ceil) "
+           "| collective s | dominant | useful FLOPs | MFU bound | bytes/dev "
+           "| fits |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.2e} "
+            f"| {r['memory_floor_s']:.2e}..{r['memory_ceiling_s']:.2e} "
+            f"| {r['collective_s']:.2e} "
+            f"| **{r['dominant']}** | {r['useful_flops_ratio']:.2f} "
+            f"| {r['mfu_bound'][0]:.2f}-{r['mfu_bound'][1]:.2f} "
+            f"| {r['bytes_per_device']/2**30:.1f} GiB "
+            f"| {'Y' if r['fits_hbm'] else 'N'} |")
+    return "\n".join(lines)
+
+
+def main():
+    rows = report("pod1")
+    for r in rows:
+        print(f"roofline/{r['arch']}/{r['shape']},"
+              f"{r['step_lower_bound_s']*1e6:.1f},"
+              f"dom={r['dominant']};useful={r['useful_flops_ratio']:.2f};"
+              f"mfu={r['mfu_bound'][0]:.2f}-{r['mfu_bound'][1]:.2f};"
+              f"fits={'Y' if r['fits_hbm'] else 'N'}")
+    print()
+    print(markdown_table(rows))
+
+
+if __name__ == "__main__":
+    main()

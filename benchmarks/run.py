@@ -1,0 +1,46 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness.
+
+  table1_rtf        — paper Table I (RTF + energy/synaptic event)
+  strong_scaling    — paper Fig. 1b top (RTF vs scale/resources)
+  phase_breakdown   — paper Fig. 1b bottom (update/deliver fractions)
+  delivery_ablation — beyond-paper: event vs dense vs gated-kernel delivery
+  roofline          — deliverable (g): per-cell roofline terms from dry-run
+  lm_step_bench     — LM substrate sanity step times (smoke scale)
+
+Run: PYTHONPATH=src python -m benchmarks.run [name ...]
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (delivery_ablation, lm_step_bench,
+                            phase_breakdown, roofline, strong_scaling,
+                            table1_rtf)
+    suites = {
+        "table1_rtf": table1_rtf.main,
+        "strong_scaling": strong_scaling.main,
+        "phase_breakdown": phase_breakdown.main,
+        "delivery_ablation": delivery_ablation.main,
+        "roofline": roofline.main,
+        "lm_step_bench": lm_step_bench.main,
+    }
+    picked = sys.argv[1:] or list(suites)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in picked:
+        try:
+            suites[name]()
+        except Exception as e:  # noqa: BLE001
+            failed.append(name)
+            print(f"{name},nan,ERROR:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

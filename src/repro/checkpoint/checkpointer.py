@@ -1,0 +1,135 @@
+"""Sharded checkpointing: save/restore, async save, reshard-on-load.
+
+Format: one ``.npz`` per host (this container: one) + a JSON manifest with
+the tree structure, shapes, dtypes and step.  Restore is mesh-agnostic —
+arrays are ``device_put`` against whatever shardings the *restoring* job
+resolves, so a job may restart on a different device count (elastic
+restart).  Saves run on a background thread off the training critical path;
+``keep`` bounds retained checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_SEP = "||"
+
+
+def _flatten(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(p) for p in path)
+        out[key] = np.asarray(leaf)
+    return out, treedef
+
+
+def save(state: Any, directory: str, step: int, keep: int = 3) -> str:
+    """Blocking save. Returns the checkpoint path."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    tmp = path + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    arrays, _ = _flatten(state)
+    np.savez(os.path.join(tmp, "host_0.npz"), **arrays)
+    manifest = {
+        "step": int(step),
+        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                   for k, v in arrays.items()},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)           # atomic publish
+    _gc(directory, keep)
+    return path
+
+
+class AsyncCheckpointer:
+    """Fire-and-forget saves on a worker thread (off the step critical path)."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, state: Any, step: int):
+        # snapshot to host memory synchronously (cheap), write async
+        arrays, _ = _flatten(jax.device_get(state))
+        self.wait()
+        self._thread = threading.Thread(
+            target=self._write, args=(arrays, step), daemon=True)
+        self._thread.start()
+
+    def _write(self, arrays, step):
+        path = os.path.join(self.directory, f"step_{step:08d}")
+        tmp = path + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "host_0.npz"), **arrays)
+        manifest = {"step": int(step),
+                    "leaves": {k: {"shape": list(v.shape),
+                                   "dtype": str(v.dtype)}
+                               for k, v in arrays.items()}}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(path):
+            shutil.rmtree(path)
+        os.rename(tmp, path)
+        _gc(self.directory, self.keep)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(directory)
+             if (m := re.fullmatch(r"step_(\d+)", d))]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, target: Any, step: Optional[int] = None,
+            shardings: Any = None) -> Any:
+    """Restore into the structure of ``target`` (values ignored).
+
+    ``shardings``: optional pytree of NamedShardings (same structure) —
+    arrays are placed onto them, which is how elastic restarts reshard.
+    """
+    step = latest_step(directory) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    data = np.load(os.path.join(path, "host_0.npz"))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(target)
+    out = []
+    for kpath, leaf in flat:
+        key = _SEP.join(str(p) for p in kpath)
+        arr = data[key]
+        out.append(arr)
+    restored = jax.tree_util.tree_unflatten(treedef, out)
+    if shardings is not None:
+        restored = jax.tree.map(
+            lambda a, s: jax.device_put(a, s), restored, shardings)
+    else:
+        restored = jax.tree.map(
+            lambda a, t: jax.device_put(np.asarray(a).astype(t.dtype)),
+            restored, target)
+    return restored
+
+
+def _gc(directory: str, keep: int):
+    steps = sorted(int(m.group(1)) for d in os.listdir(directory)
+                   if (m := re.fullmatch(r"step_(\d+)", d)))
+    for s in steps[:-keep] if keep else []:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"),
+                      ignore_errors=True)

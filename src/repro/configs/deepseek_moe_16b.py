@@ -1,0 +1,18 @@
+"""deepseek-moe-16b [moe] — 2 shared + 64 routed top-6 [arXiv:2401.06066; hf]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-moe-16b", family="moe",
+    n_layers=28, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=1408, vocab_size=102400, head_dim=128,
+    n_experts=64, top_k=6, n_shared_experts=2, moe_d_ff=1408,
+    notes="DeepSeekMoE 16B: fine-grained experts (ff=1408), 2 shared + "
+          "64 routed top-6, MHA kv=16.",
+)
+
+SMOKE = ModelConfig(
+    name="deepseek-moe-16b-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=64, vocab_size=512, head_dim=16,
+    n_experts=8, top_k=3, n_shared_experts=2, moe_d_ff=64,
+)

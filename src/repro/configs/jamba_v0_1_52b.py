@@ -1,0 +1,21 @@
+"""jamba-v0.1-52b [hybrid] — Mamba+attn 1:7, MoE 16e top-2 [arXiv:2403.19887; hf]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b", family="hybrid",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab_size=65536, head_dim=128,
+    n_experts=16, top_k=2, moe_d_ff=14336, moe_every=2, moe_offset=1,
+    attn_every=8,            # 1 attention : 7 mamba per period of 8
+    ssm_d_state=16, ssm_d_conv=4, ssm_expand=2,
+    notes="Jamba v0.1: attn layer at l%8==0, Mamba otherwise; MoE on odd "
+          "layers. Runs long_500k (sub-quadratic decode).",
+)
+
+SMOKE = ModelConfig(
+    name="jamba-v0.1-52b-smoke", family="hybrid",
+    n_layers=4, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=128, vocab_size=512, head_dim=16,
+    n_experts=4, top_k=2, moe_d_ff=128, moe_every=2, moe_offset=1,
+    attn_every=4, ssm_d_state=8, ssm_d_conv=4, ssm_expand=2,
+)

@@ -1,0 +1,21 @@
+"""kimi-k2-1t-a32b [moe] — trillion-param MoE 384e top-8 [arXiv:2501.kimi2; unverified]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b", family="moe",
+    n_layers=61, d_model=7168, n_heads=64, n_kv_heads=8,
+    d_ff=2048, vocab_size=163840, head_dim=128,
+    n_experts=384, top_k=8, n_shared_experts=1, moe_d_ff=2048,
+    optimizer="adafactor",   # AdamW fp32 states (16 TB) exceed 512x16 GB HBM
+    param_dtype="bfloat16",  # f32 master alone (4 TB) would not fit either
+    notes="Kimi K2: 384 routed + 1 shared expert, top-8; ~1T total / 32B "
+          "active parameters. Adafactor + bf16 params for state footprint.",
+)
+
+SMOKE = ModelConfig(
+    name="kimi-k2-1t-a32b-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=64, vocab_size=512, head_dim=16,
+    n_experts=8, top_k=2, n_shared_experts=1, moe_d_ff=64,
+    optimizer="adafactor",
+)

@@ -1,0 +1,25 @@
+"""llama-3.2-vision-90b [vlm] — cross-attn image layers [hf:meta-llama/Llama-3.2-11B-Vision; unverified].
+
+Backbone only (per assignment): 100 layers, every 5th cross-attends to
+precomputed patch embeddings supplied by ``input_specs()`` (vision tower
+stubbed).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-90b", family="vlm",
+    n_layers=100, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=28672, vocab_size=128256, head_dim=128,
+    rope_theta=500000.0,
+    cross_attn_every=5, n_img_tokens=4096,
+    param_dtype="bfloat16",   # f32 master would add 1.4 GiB/dev + f32 grads
+    notes="80 self-attn + 20 cross-attn layers; image patch embeddings are "
+          "a stub input. Full attention -> long_500k skipped.",
+)
+
+SMOKE = ModelConfig(
+    name="llama-3.2-vision-90b-smoke", family="vlm",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=128, vocab_size=512, head_dim=16,
+    cross_attn_every=2, n_img_tokens=16,
+)

@@ -1,0 +1,26 @@
+"""The paper's own model: full-density cortical microcircuit (PD 2014).
+
+Not an LM architecture — selected via ``--arch microcircuit`` in
+``launch/simulate.py`` and dry-run separately (EXPERIMENTS.md §Dry-run lists
+it alongside the 40 LM cells).
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class MicrocircuitConfig:
+    name: str = "microcircuit"
+    family: str = "snn"
+    n_scaling: float = 1.0
+    k_scaling: float = 1.0
+    dt: float = 0.1              # ms
+    t_sim: float = 10000.0       # ms, the paper's strong-scaling task (10 s)
+    t_presim: float = 100.0      # ms discarded transient
+    strategy: str = "event"      # event | dense
+    spike_budget: int = 512
+    seed: int = 55
+
+
+CONFIG = MicrocircuitConfig()
+SMOKE = MicrocircuitConfig(n_scaling=0.02, k_scaling=0.02, t_sim=100.0,
+                           spike_budget=128)

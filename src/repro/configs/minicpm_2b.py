@@ -1,0 +1,18 @@
+"""minicpm-2b [dense] — WSD schedule, llama-like [arXiv:2404.06395; hf]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm-2b", family="dense",
+    n_layers=40, d_model=2304, n_heads=36, n_kv_heads=36,
+    d_ff=5760, vocab_size=122753, head_dim=64,
+    tie_embeddings=True,
+    lr_schedule="wsd",   # warmup-stable-decay, the paper's contribution
+    notes="MiniCPM 2B: MHA (kv=36), tied embeddings, WSD LR schedule.",
+)
+
+SMOKE = ModelConfig(
+    name="minicpm-2b-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=160, vocab_size=512, head_dim=16,
+    tie_embeddings=True, lr_schedule="wsd",
+)

@@ -1,0 +1,16 @@
+"""minitron-4b [dense] — pruned nemotron [arXiv:2407.14679; hf]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-4b", family="dense",
+    n_layers=32, d_model=3072, n_heads=24, n_kv_heads=8,
+    d_ff=9216, vocab_size=256000, head_dim=128,
+    rope_theta=10000.0,
+    notes="Minitron 4B: width/depth-pruned Nemotron-4, GQA kv=8.",
+)
+
+SMOKE = ModelConfig(
+    name="minitron-4b-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=96, vocab_size=512, head_dim=16,
+)

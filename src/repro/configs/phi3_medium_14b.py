@@ -1,0 +1,16 @@
+"""phi3-medium-14b [dense] — RoPE SwiGLU GQA [arXiv:2404.14219; unverified]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3-medium-14b", family="dense",
+    n_layers=40, d_model=5120, n_heads=40, n_kv_heads=10,
+    d_ff=17920, vocab_size=100352, head_dim=128,
+    rope_theta=10000.0,
+    notes="Phi-3 medium: dense decoder, GQA kv=10, SwiGLU.",
+)
+
+SMOKE = ModelConfig(
+    name="phi3-medium-14b-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=160, vocab_size=512, head_dim=16,
+)

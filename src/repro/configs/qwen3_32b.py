@@ -1,0 +1,16 @@
+"""qwen3-32b [dense] — qk_norm, GQA [hf:Qwen/Qwen3-8B; hf]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-32b", family="dense",
+    n_layers=64, d_model=5120, n_heads=64, n_kv_heads=8,
+    d_ff=25600, vocab_size=151936, head_dim=128,
+    qk_norm=True, rope_theta=1000000.0,
+    notes="Qwen3 32B: per-head RMS qk-norm, GQA kv=8, explicit head_dim=128.",
+)
+
+SMOKE = ModelConfig(
+    name="qwen3-32b-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=160, vocab_size=512, head_dim=16, qk_norm=True,
+)

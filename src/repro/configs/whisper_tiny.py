@@ -1,0 +1,23 @@
+"""whisper-tiny [audio] — enc-dec, conv frontend stubbed [arXiv:2212.04356; unverified].
+
+The modality frontend is a STUB per assignment: ``input_specs()`` provides
+precomputed frame embeddings [B, encoder_seq, d_model]; the conv1d+mel stack
+is not modelled.  Backbone: 4 encoder + 4 decoder layers (whisper-tiny).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny", family="encdec",
+    n_layers=4, d_model=384, n_heads=6, n_kv_heads=6,
+    d_ff=1536, vocab_size=51865, head_dim=64,
+    encoder_layers=4, encoder_seq=1500, max_position=32768,
+    notes="Enc-dec; decoder cross-attends to 1500 stubbed frame embeddings. "
+          "Full attention -> long_500k skipped.",
+)
+
+SMOKE = ModelConfig(
+    name="whisper-tiny-smoke", family="encdec",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=128, vocab_size=512, head_dim=16,
+    encoder_layers=2, encoder_seq=64, max_position=256,
+)

@@ -1,0 +1,22 @@
+"""xlstm-1.3b [ssm] — sLSTM + mLSTM blocks [arXiv:2405.04517; unverified].
+
+d_ff=0: no separate FFN; the gated up-projection lives inside each
+mLSTM/sLSTM block (projection factor 2). sLSTM every 8th block, mLSTM
+otherwise (the 1.3B "xLSTM[7:1]" ratio).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b", family="ssm",
+    n_layers=48, d_model=2048, n_heads=4, n_kv_heads=4,
+    d_ff=0, vocab_size=50304, head_dim=512,
+    xlstm=True, slstm_every=8,
+    notes="Runs long_500k: O(1)-state recurrent decode.",
+)
+
+SMOKE = ModelConfig(
+    name="xlstm-1.3b-smoke", family="ssm",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=0, vocab_size=512, head_dim=16,
+    xlstm=True, slstm_every=2,
+)

@@ -1,0 +1,98 @@
+"""Spike-delivery strategies.
+
+NEST delivers spikes event-wise: each spiking neuron's target list is walked
+and weights are accumulated into per-target ring buffers at slot
+``(t + delay) mod D``.  The TPU adaptations keep the semantics but change the
+mechanism (DESIGN.md section 2):
+
+* ``event``  — budgeted event-driven: the <=S spike ids of the step gather
+  their padded ELL rows, and one large ``scatter-add`` accumulates all
+  ``S x K`` (target, weight, slot) triples into the ring buffer.
+
+* ``dense``  — delay-binned matrix delivery: the 0/1 spike vector multiplies
+  ``W[D, N_pre, N_post]`` on the MXU, and the ``[D, N_post]`` result is rolled
+  by ``t`` and added to the ring.  FLOP-wasteful (density ~0.1 per bin) but
+  bandwidth-streaming; the Pallas ``spike_deliver`` kernel recovers the
+  sparsity by skipping weight tiles whose source-spike block is empty.
+
+Both write into ``ring[D, 2, N+1]``: channel 0/1 = excitatory/inhibitory
+arrivals, one trailing dump column absorbs padded scatters.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EventTables(NamedTuple):
+    """Padded ELL out-adjacency, plus one sentinel row at index N."""
+    targets: jnp.ndarray   # [N+1, K] int32 in [0, N]; N == dump
+    weights: jnp.ndarray   # [N+1, K] float32
+    dbins: jnp.ndarray     # [N+1, K] int32 >= 1
+
+
+class DenseTables(NamedTuple):
+    W: jnp.ndarray         # [D, N_pre, N_post] signed weights
+
+
+def make_event_tables(targets, weights, dbins) -> EventTables:
+    """Append the sentinel source row (all entries point at the dump slot)."""
+    n, k = targets.shape
+    pad_t = jnp.full((1, k), n, dtype=targets.dtype)
+    pad_w = jnp.zeros((1, k), dtype=weights.dtype)
+    pad_d = jnp.ones((1, k), dtype=dbins.dtype)
+    return EventTables(
+        targets=jnp.concatenate([targets, pad_t], axis=0),
+        weights=jnp.concatenate([weights, pad_w], axis=0),
+        dbins=jnp.concatenate([dbins, pad_d], axis=0),
+    )
+
+
+def deliver_event(ring: jnp.ndarray, tables: EventTables,
+                  spiked: jnp.ndarray, t: jnp.ndarray,
+                  n_exc: int, spike_budget: int):
+    """Event-driven delivery. Returns (ring', n_overflow)."""
+    D, _, n_cols = ring.shape
+    n = spiked.shape[0]
+    n_spikes = jnp.sum(spiked, dtype=jnp.int32)
+    # Padded spike-id extraction; fill with the sentinel source row `n`.
+    (ids,) = jnp.nonzero(spiked, size=spike_budget, fill_value=n)
+
+    tg = tables.targets[ids]                     # [S, K] in [0, n]
+    w = tables.weights[ids]                      # [S, K]
+    db = tables.dbins[ids]                       # [S, K]
+    ch = (ids >= n_exc).astype(jnp.int32)        # Dale's law: row sign by src
+    slot = (t + db) % D                          # [S, K]
+
+    lin = (slot * (2 * n_cols)
+           + ch[:, None] * n_cols
+           + tg)
+    ring = ring.reshape(-1).at[lin.reshape(-1)].add(
+        w.reshape(-1), mode="drop").reshape(D, 2, n_cols)
+    overflow = jnp.maximum(n_spikes - spike_budget, 0)
+    return ring, overflow
+
+
+def deliver_dense(ring: jnp.ndarray, tables: DenseTables,
+                  spiked: jnp.ndarray, t: jnp.ndarray, n_exc: int,
+                  matvec=None):
+    """Delay-binned dense delivery. Returns (ring', overflow=0).
+
+    ``matvec(s, W)`` with ``s``[P] and ``W``[D, P, N] -> [D, N] can be swapped
+    for the Pallas activity-gated kernel; default is a jnp einsum.
+    """
+    D, _, n_cols = ring.shape
+    n = spiked.shape[0]
+    s = spiked.astype(tables.W.dtype)
+    if matvec is None:
+        matvec = lambda v, W: jnp.einsum("p,dpn->dn", v, W,
+                                         preferred_element_type=jnp.float32)
+    upd_ex = matvec(s[:n_exc], tables.W[:, :n_exc, :])   # [D, N]
+    upd_in = matvec(s[n_exc:], tables.W[:, n_exc:, :])   # [D, N]
+    upd = jnp.stack([upd_ex, upd_in], axis=1)            # [D, 2, N]
+    upd = jnp.pad(upd, ((0, 0), (0, 0), (0, n_cols - n)))
+    # bin d arrives at slot (t + d) mod D
+    upd = jnp.roll(upd, shift=t, axis=0)
+    return ring + upd.astype(ring.dtype), jnp.zeros((), jnp.int32)

@@ -1,0 +1,305 @@
+"""Sharded microcircuit simulation (NEST's distribution scheme on a mesh).
+
+Ownership follows NEST exactly: each device owns the *state* and the
+*incoming synapses* of a contiguous slice of neurons.  One simulation step:
+
+  update      — local exact-integration LIF step (embarrassingly parallel)
+  communicate — ``all_gather`` of the local spike bitmasks across the whole
+                mesh (NEST: MPI_Allgather of the spike registry)
+  deliver     — each device scatters the spikes of *global* sources into its
+                *local* ring buffer through its local ELL columns
+
+The connectome is laid out device-major: for every source neuron, its
+synapses are grouped by owning device and padded to ``k_loc`` per device, so
+the per-device table is just a [N_pad+1, k_loc] column block — an even
+``PartitionSpec(None, 'flat')`` sharding of one global [N_pad+1, D*k_loc]
+array.  Targets are stored pre-localised (0..n_loc-1, sentinel n_loc).
+
+Executed through ``shard_map`` so the collective is explicit in the HLO —
+the dry-run's roofline reads the communicate cost straight off it.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.connectivity import Connectome
+from repro.core.neuron import NeuronParams, Propagators
+
+
+class ShardedTables(NamedTuple):
+    targets: jnp.ndarray   # [N_pad+1, n_dev * k_loc] int32, localised
+    weights: jnp.ndarray   # [N_pad+1, n_dev * k_loc] f32
+    dbins: jnp.ndarray     # [N_pad+1, n_dev * k_loc] int32
+    k_ext: jnp.ndarray     # [N_pad]
+    i_dc: jnp.ndarray      # [N_pad]
+
+
+def localize_ell(c: Connectome, n_dev: int,
+                 k_loc: Optional[int] = None) -> Tuple[ShardedTables, dict]:
+    """Regroup the ELL table by target-owning device (host-side numpy)."""
+    n = c.n_total
+    n_pad = -(-n // n_dev) * n_dev
+    n_loc = n_pad // n_dev
+
+    src = np.repeat(np.arange(n), c.targets.shape[1])
+    tgt = c.targets.reshape(-1)
+    w = c.weights.reshape(-1)
+    db = c.dbins.reshape(-1)
+    valid = tgt < n
+    src, tgt, w, db = src[valid], tgt[valid], w[valid], db[valid]
+    dev = tgt // n_loc
+    tgt_local = tgt - dev * n_loc
+
+    # per (source, device) ragged rows -> padded k_loc
+    order = np.lexsort((tgt_local, dev, src))
+    src, dev, tgt_local = src[order], dev[order], tgt_local[order]
+    w, db = w[order], db[order]
+    cell = src.astype(np.int64) * n_dev + dev
+    counts = np.bincount(cell, minlength=n * n_dev)
+    k_max = int(counts.max()) if counts.size else 1
+    if k_loc is None:
+        k_loc = k_max
+    elif k_loc < k_max:
+        raise ValueError(f"k_loc={k_loc} < max {k_max}")
+    starts = np.concatenate([[0], np.cumsum(counts)])
+    col = np.arange(src.shape[0], dtype=np.int64) - starts[cell]
+
+    T = np.full((n_pad + 1, n_dev, k_loc), n_loc, dtype=np.int32)
+    W = np.zeros((n_pad + 1, n_dev, k_loc), dtype=np.float32)
+    D = np.ones((n_pad + 1, n_dev, k_loc), dtype=np.int32)
+    T[src, dev, col] = tgt_local
+    W[src, dev, col] = w
+    D[src, dev, col] = db
+
+    k_ext = np.zeros(n_pad, np.float32)
+    k_ext[:n] = c.k_ext
+    i_dc = np.zeros(n_pad, np.float32)
+    i_dc[:n] = c.i_dc
+
+    tables = ShardedTables(
+        targets=jnp.asarray(T.reshape(n_pad + 1, n_dev * k_loc)),
+        weights=jnp.asarray(W.reshape(n_pad + 1, n_dev * k_loc)),
+        dbins=jnp.asarray(D.reshape(n_pad + 1, n_dev * k_loc)),
+        k_ext=jnp.asarray(k_ext),
+        i_dc=jnp.asarray(i_dc),
+    )
+    meta = {"n_pad": n_pad, "n_loc": n_loc, "k_loc": k_loc, "n_dev": n_dev}
+    return tables, meta
+
+
+def abstract_sharded_tables(c_meta: dict, n_dev: int, k_loc: int,
+                            n_pad: int) -> ShardedTables:
+    """ShapeDtypeStruct stand-ins for the dry-run (no allocation)."""
+    sd = jax.ShapeDtypeStruct
+    cols = n_dev * k_loc
+    return ShardedTables(
+        targets=sd((n_pad + 1, cols), jnp.int32),
+        weights=sd((n_pad + 1, cols), jnp.float32),
+        dbins=sd((n_pad + 1, cols), jnp.int32),
+        k_ext=sd((n_pad,), jnp.float32),
+        i_dc=sd((n_pad,), jnp.float32),
+    )
+
+
+class ShardedSimState(NamedTuple):
+    V: jnp.ndarray         # [N_pad]
+    I_ex: jnp.ndarray
+    I_in: jnp.ndarray
+    refrac: jnp.ndarray    # int32
+    ring: jnp.ndarray      # [D_ring, 2, N_pad + n_dev]  (+1 dump col/device)
+    t: jnp.ndarray
+    key: jnp.ndarray       # one key per device: [n_dev, 2] uint32
+    overflow: jnp.ndarray  # [n_dev] int32
+
+
+def abstract_state(n_pad: int, n_dev: int, d_ring: int) -> ShardedSimState:
+    sd = jax.ShapeDtypeStruct
+    return ShardedSimState(
+        V=sd((n_pad,), jnp.float32),
+        I_ex=sd((n_pad,), jnp.float32),
+        I_in=sd((n_pad,), jnp.float32),
+        refrac=sd((n_pad,), jnp.int32),
+        ring=sd((d_ring, 2, n_pad + n_dev), jnp.float32),
+        t=sd((), jnp.int32),
+        key=sd((n_dev, 2), jnp.uint32),
+        overflow=sd((n_dev,), jnp.int32),
+    )
+
+
+def make_sharded_step(mesh, meta: dict, prop: Propagators, *,
+                      n_exc: int, w_ext: float, bg_rate: float, dt: float,
+                      spike_budget: int, n_steps: int):
+    """Returns a shard_map'd ``sim_chunk(state, tables) -> (state, counts)``.
+
+    ``counts``: [n_steps, n_dev] spikes per device per step (cheap record).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    axes = tuple(mesh.axis_names)
+    n_loc = meta["n_loc"]
+    lam_scale = bg_rate * dt * 1e-3
+
+    state_spec = ShardedSimState(
+        V=P(axes), I_ex=P(axes), I_in=P(axes), refrac=P(axes),
+        ring=P(None, None, axes), t=P(), key=P(axes), overflow=P(axes))
+    tab_spec = ShardedTables(
+        targets=P(None, axes), weights=P(None, axes), dbins=P(None, axes),
+        k_ext=P(axes), i_dc=P(axes))
+
+    def step(carry, _, tab: ShardedTables):
+        st: ShardedSimState = carry
+        D_ring = st.ring.shape[0]
+        slot = st.t % D_ring
+        arrivals = jax.lax.dynamic_index_in_dim(st.ring, slot, 0, False)
+        in_ex, in_in = arrivals[0, :n_loc], arrivals[1, :n_loc]
+
+        # -- update (local) --
+        key, sub = jax.random.split(st.key[0])
+        ext = jax.random.poisson(sub, tab.k_ext * lam_scale, dtype=jnp.int32)
+        in_ex = in_ex + w_ext * ext.astype(in_ex.dtype)
+        V = (prop.E_L + (st.V - prop.E_L) * prop.P22
+             + st.I_ex * prop.P21_ex + st.I_in * prop.P21_in
+             + tab.i_dc * prop.P20)
+        I_ex = st.I_ex * prop.P11_ex + in_ex
+        I_in = st.I_in * prop.P11_in + in_in
+        refr = st.refrac > 0
+        V = jnp.where(refr, prop.V_reset, V)
+        spiked = (V >= prop.V_th) & ~refr
+        V = jnp.where(spiked, prop.V_reset, V)
+        refrac = jnp.where(spiked, prop.ref_steps,
+                           jnp.maximum(st.refrac - 1, 0)).astype(jnp.int32)
+        ring = jax.lax.dynamic_update_index_in_dim(
+            st.ring, jnp.zeros_like(arrivals), slot, 0)
+
+        # -- communicate: the spike registry all-gather (NEST's Allgather) --
+        spiked_global = jax.lax.all_gather(spiked, axes, tiled=True)
+
+        # -- deliver (into local ring via local ELL columns) --
+        n_glob = spiked_global.shape[0]
+        (ids,) = jnp.nonzero(spiked_global, size=spike_budget,
+                             fill_value=n_glob)
+        tg = tab.targets[ids]                      # [S, k_loc] local ids
+        w = tab.weights[ids]
+        db = tab.dbins[ids]
+        ch = (ids >= n_exc).astype(jnp.int32)[:, None]
+        slot2 = (st.t + db) % D_ring
+        n_cols = n_loc + 1
+        lin = slot2 * (2 * n_cols) + ch * n_cols + tg
+        ring = ring.reshape(-1).at[lin.reshape(-1)].add(
+            w.reshape(-1), mode="drop").reshape(D_ring, 2, n_cols)
+
+        n_spk = jnp.sum(spiked_global, dtype=jnp.int32)
+        overflow = st.overflow + jnp.maximum(n_spk - spike_budget, 0)
+        new = ShardedSimState(V, I_ex, I_in, refrac, ring, st.t + 1,
+                              key[None], overflow)
+        return new, jnp.sum(spiked, dtype=jnp.int32)[None]
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(state_spec, tab_spec),
+        out_specs=(state_spec, P(None, axes)),
+        check_rep=False)
+    def sim_chunk(state, tables):
+        return jax.lax.scan(
+            functools.partial(step, tab=tables), state, None, length=n_steps)
+
+    return sim_chunk
+
+
+# ---------------------------------------------------------------------------
+# Dense (delay-binned matmul) strategy, pjit-sharded
+# ---------------------------------------------------------------------------
+
+class DenseSimState(NamedTuple):
+    V: jnp.ndarray         # [N]
+    I_ex: jnp.ndarray
+    I_in: jnp.ndarray
+    refrac: jnp.ndarray
+    ring: jnp.ndarray      # [D_ring, 2, N]
+    t: jnp.ndarray
+    key: jnp.ndarray
+    overflow: jnp.ndarray
+
+
+def abstract_dense(n: int, d_ring: int, dtype=jnp.bfloat16):
+    sd = jax.ShapeDtypeStruct
+    state = DenseSimState(
+        V=sd((n,), jnp.float32), I_ex=sd((n,), jnp.float32),
+        I_in=sd((n,), jnp.float32), refrac=sd((n,), jnp.int32),
+        ring=sd((d_ring, 2, n), jnp.float32), t=sd((), jnp.int32),
+        key=sd((2,), jnp.uint32), overflow=sd((), jnp.int32))
+    W = sd((d_ring, n, n), dtype)
+    aux = {"k_ext": sd((n,), jnp.float32), "i_dc": sd((n,), jnp.float32)}
+    return state, W, aux
+
+
+def dense_shardings(mesh, state: DenseSimState, W, aux):
+    """W 2D-sharded (pre over data axes, post over 'model'); the [N]-sized
+    state is replicated (300 KB)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    axes = mesh.axis_names
+    pre = tuple(a for a in axes if a != "model") or (None,)
+    rep = NamedSharding(mesh, P())
+    w_sh = NamedSharding(mesh, P(None, pre, "model"))
+    st = jax.tree.map(lambda _: rep, state)
+    ax = jax.tree.map(lambda _: rep, aux)
+    return st, w_sh, ax
+
+
+def make_dense_step(mesh, prop: Propagators, *, n: int, n_exc: int,
+                    w_ext: float, bg_rate: float, dt: float, n_steps: int):
+    """pjit-ready ``sim_chunk(state, W, aux) -> (state, counts[n_steps])``."""
+    # single-signed-channel delivery requires equal synaptic time constants
+    assert prop.P11_ex == prop.P11_in and prop.P21_ex == prop.P21_in
+    lam_scale = bg_rate * dt * 1e-3
+
+    def step(st: DenseSimState, _, W, aux):
+        D_ring = st.ring.shape[0]
+        slot = st.t % D_ring
+        arrivals = jax.lax.dynamic_index_in_dim(st.ring, slot, 0, False)
+        in_ex, in_in = arrivals[0], arrivals[1]
+        key, sub = jax.random.split(st.key)
+        ext = jax.random.poisson(sub, aux["k_ext"] * lam_scale,
+                                 dtype=jnp.int32)
+        in_ex = in_ex + w_ext * ext.astype(in_ex.dtype)
+        V = (prop.E_L + (st.V - prop.E_L) * prop.P22
+             + st.I_ex * prop.P21_ex + st.I_in * prop.P21_in
+             + aux["i_dc"] * prop.P20)
+        I_ex = st.I_ex * prop.P11_ex + in_ex
+        I_in = st.I_in * prop.P11_in + in_in
+        refr = st.refrac > 0
+        V = jnp.where(refr, prop.V_reset, V)
+        spiked = (V >= prop.V_th) & ~refr
+        V = jnp.where(spiked, prop.V_reset, V)
+        refrac = jnp.where(spiked, prop.ref_steps,
+                           jnp.maximum(st.refrac - 1, 0)).astype(jnp.int32)
+        ring = jax.lax.dynamic_update_index_in_dim(
+            st.ring, jnp.zeros_like(arrivals), slot, 0)
+
+        # Equal tau_syn_ex/in (this model) => exc/inh currents obey the same
+        # propagator, so delivery runs on ONE signed channel over the FULL
+        # weight matrix.  The split variant sliced W at n_exc — a shard-
+        # misaligned boundary that made GSPMD re-partition W with
+        # collective-permutes every step (see EXPERIMENTS.md §Perf).
+        s = spiked.astype(W.dtype)
+        upd = jnp.einsum("p,dpn->dn", s, W,
+                         preferred_element_type=jnp.float32)
+        upd = jnp.stack([upd, jnp.zeros_like(upd)], axis=1)
+        ring = ring + jnp.roll(upd, shift=st.t, axis=0).astype(ring.dtype)
+
+        new = DenseSimState(V, I_ex, I_in, refrac, ring, st.t + 1, key,
+                            st.overflow)
+        return new, jnp.sum(spiked, dtype=jnp.int32)
+
+    def sim_chunk(state, W, aux):
+        return jax.lax.scan(
+            functools.partial(step, W=W, aux=aux), state, None,
+            length=n_steps)
+
+    return sim_chunk

@@ -1,0 +1,240 @@
+"""Simulation engine: the update -> deliver -> communicate cycle as a scan.
+
+Mirrors the phase structure the paper instruments (Fig. 1b):
+
+* ``update``      — exact-integration LIF step + Poisson external drive
+                    (optionally the fused Pallas ``lif_update`` kernel),
+* ``deliver``     — spike propagation into the delay ring buffer
+                    (strategy ``event`` or ``dense``),
+* ``communicate`` — in the sharded engine, the all-gather of the spike
+                    registry (see ``repro.launch.dryrun`` / ``sharded_step``);
+                    a no-op on a single device.
+
+``simulate`` fuses the cycle into one ``lax.scan`` (production mode);
+``PhaseRunner`` exposes each phase as a separately jitted function so the
+benchmark harness can reproduce the paper's phase-breakdown measurement.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import delivery as dlv
+from repro.core.connectivity import Connectome, dense_delay_binned
+from repro.core.neuron import NeuronParams, NeuronState, Propagators, lif_step
+from repro.core.params import InputParams
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    dt: float = 0.1
+    strategy: str = "event"            # "event" | "dense"
+    spike_budget: int = 512            # max spikes delivered per step (event)
+    record: str = "pop_counts"         # "spikes" | "pop_counts" | "none"
+    use_lif_kernel: bool = False       # Pallas fused update (interpret on CPU)
+    use_deliver_kernel: bool = False   # Pallas gated dense delivery
+    bg_rate: float = 8.0               # Hz per external synapse
+
+
+class Network(NamedTuple):
+    """Device-resident network tables (pytree)."""
+    event: Optional[dlv.EventTables]
+    dense: Optional[dlv.DenseTables]
+    k_ext: jnp.ndarray      # [N]
+    i_dc: jnp.ndarray       # [N]
+    pop_of: jnp.ndarray     # [N] int32
+    v0_mean: jnp.ndarray
+    v0_sd: jnp.ndarray
+
+
+class SimState(NamedTuple):
+    neuron: NeuronState
+    ring: jnp.ndarray       # [D, 2, N+1]
+    t: jnp.ndarray          # int32 step counter (ring phase)
+    key: jnp.ndarray
+    overflow: jnp.ndarray   # int32 cumulative spike-budget overflow
+
+
+def prepare_network(c: Connectome, cfg: SimConfig,
+                    dense_dtype=jnp.float32) -> Network:
+    event = None
+    dense = None
+    if cfg.strategy == "event":
+        event = dlv.make_event_tables(
+            jnp.asarray(c.targets), jnp.asarray(c.weights),
+            jnp.asarray(c.dbins))
+    elif cfg.strategy == "dense":
+        W = dense_delay_binned(c)
+        dense = dlv.DenseTables(W=jnp.asarray(W, dtype=dense_dtype))
+    else:
+        raise ValueError(f"unknown strategy {cfg.strategy!r}")
+    return Network(
+        event=event,
+        dense=dense,
+        k_ext=jnp.asarray(c.k_ext),
+        i_dc=jnp.asarray(c.i_dc),
+        pop_of=jnp.asarray(c.pop_of),
+        v0_mean=jnp.asarray(c.v0_mean),
+        v0_sd=jnp.asarray(c.v0_sd),
+    )
+
+
+def init_state(c: Connectome, key, w_ext_dtype=jnp.float32) -> SimState:
+    """Optimized initial conditions (Rhodes et al. 2019), as in the paper."""
+    n = c.n_total
+    k_v, k_sim = jax.random.split(jax.random.PRNGKey(0) if key is None else key)
+    V = (jnp.asarray(c.v0_mean)
+         + jnp.asarray(c.v0_sd) * jax.random.normal(k_v, (n,), jnp.float32))
+    neuron = NeuronState(
+        V=V.astype(w_ext_dtype),
+        I_ex=jnp.zeros((n,), w_ext_dtype),
+        I_in=jnp.zeros((n,), w_ext_dtype),
+        refrac=jnp.zeros((n,), jnp.int32),
+    )
+    ring = jnp.zeros((c.d_max_bins, 2, n + 1), w_ext_dtype)
+    return SimState(neuron=neuron, ring=ring, t=jnp.zeros((), jnp.int32),
+                    key=k_sim, overflow=jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Phases
+# ---------------------------------------------------------------------------
+
+def update_phase(state: SimState, net: Network, prop: Propagators,
+                 cfg: SimConfig, w_ext: float, n: int):
+    """Read ring slot, add Poisson drive, integrate neurons, detect spikes."""
+    D = state.ring.shape[0]
+    slot = state.t % D
+    arrivals = jax.lax.dynamic_index_in_dim(
+        state.ring, slot, axis=0, keepdims=False)       # [2, N+1]
+    in_ex = arrivals[0, :n]
+    in_in = arrivals[1, :n]
+
+    key, sub = jax.random.split(state.key)
+    lam = net.k_ext * (cfg.bg_rate * cfg.dt * 1e-3)
+    ext = jax.random.poisson(sub, lam, dtype=jnp.int32)
+    in_ex = in_ex + w_ext * ext.astype(in_ex.dtype)
+
+    if cfg.use_lif_kernel:
+        from repro.kernels import ops as kops
+        neuron, spiked = kops.lif_update(
+            state.neuron, prop, in_ex, in_in, net.i_dc)
+    else:
+        neuron, spiked = lif_step(state.neuron, prop, in_ex, in_in, net.i_dc)
+
+    # consume the slot
+    ring = jax.lax.dynamic_update_index_in_dim(
+        state.ring, jnp.zeros_like(arrivals), slot, axis=0)
+    return SimState(neuron, ring, state.t, key, state.overflow), spiked
+
+
+def deliver_phase(state: SimState, net: Network, cfg: SimConfig,
+                  spiked: jnp.ndarray, n_exc: int):
+    if cfg.strategy == "event":
+        ring, ovf = dlv.deliver_event(
+            state.ring, net.event, spiked, state.t, n_exc, cfg.spike_budget)
+    else:
+        matvec = None
+        if cfg.use_deliver_kernel:
+            from repro.kernels import ops as kops
+            matvec = kops.gated_spike_matvec
+        ring, ovf = dlv.deliver_dense(
+            state.ring, net.dense, spiked, state.t, n_exc, matvec=matvec)
+    return SimState(state.neuron, ring, state.t + 1, state.key,
+                    state.overflow + ovf)
+
+
+# ---------------------------------------------------------------------------
+# Fused production loop
+# ---------------------------------------------------------------------------
+
+def make_step(net: Network, prop: Propagators, cfg: SimConfig,
+              w_ext: float, n: int, n_exc: int):
+    def step(state: SimState, _):
+        state, spiked = update_phase(state, net, prop, cfg, w_ext, n)
+        state = deliver_phase(state, net, cfg, spiked, n_exc)
+        if cfg.record == "spikes":
+            out = spiked
+        elif cfg.record == "pop_counts":
+            out = jax.ops.segment_sum(
+                spiked.astype(jnp.int32), net.pop_of,
+                num_segments=8, indices_are_sorted=True)
+        else:
+            out = jnp.zeros((), jnp.int32)
+        return state, out
+    return step
+
+
+@functools.partial(jax.jit, static_argnames=("n_steps", "cfg", "prop",
+                                             "w_ext", "n", "n_exc"))
+def _run(state, net, n_steps: int, cfg: SimConfig, prop: Propagators,
+         w_ext: float, n: int, n_exc: int):
+    step = make_step(net, prop, cfg, w_ext, n, n_exc)
+    return jax.lax.scan(step, state, None, length=n_steps)
+
+
+def simulate(c: Connectome, t_sim_ms: float, cfg: SimConfig,
+             neuron: Optional[NeuronParams] = None,
+             key=None, net: Optional[Network] = None,
+             state: Optional[SimState] = None):
+    """Build (if needed), run ``t_sim_ms`` of model time, return results.
+
+    Returns (final_state, recorded, net) where ``recorded`` has leading axis
+    n_steps.
+    """
+    neuron = neuron or NeuronParams()
+    prop = Propagators.make(neuron, cfg.dt)
+    if net is None:
+        net = prepare_network(c, cfg)
+    if state is None:
+        state = init_state(c, key)
+    n_steps = int(round(t_sim_ms / cfg.dt))
+    final, recorded = _run(state, net, n_steps, cfg, prop,
+                           c.w_ext, c.n_total, c.n_exc)
+    return final, recorded, net
+
+
+# ---------------------------------------------------------------------------
+# Instrumented mode: per-phase timers (paper Fig. 1b bottom)
+# ---------------------------------------------------------------------------
+
+class PhaseRunner:
+    """Runs the cycle with each phase a separate jitted function.
+
+    Slower than the fused scan (per-step dispatch) but lets the benchmark
+    harness time update/deliver separately, as the paper's timers do.
+    """
+
+    def __init__(self, c: Connectome, cfg: SimConfig,
+                 neuron: Optional[NeuronParams] = None, key=None):
+        neuron = neuron or NeuronParams()
+        self.cfg = cfg
+        self.prop = Propagators.make(neuron, cfg.dt)
+        self.net = prepare_network(c, cfg)
+        self.state = init_state(c, key)
+        self.n, self.n_exc = c.n_total, c.n_exc
+        self.w_ext = c.w_ext
+
+        self._update = jax.jit(lambda s: update_phase(
+            s, self.net, self.prop, cfg, self.w_ext, self.n))
+        self._deliver = jax.jit(lambda s, spk: deliver_phase(
+            s, self.net, cfg, spk, self.n_exc))
+
+    def step_timed(self, timers: dict):
+        import time
+        t0 = time.perf_counter()
+        state, spiked = self._update(self.state)
+        spiked.block_until_ready()
+        t1 = time.perf_counter()
+        state = self._deliver(state, spiked)
+        jax.block_until_ready(state)
+        t2 = time.perf_counter()
+        timers["update"] = timers.get("update", 0.0) + (t1 - t0)
+        timers["deliver"] = timers.get("deliver", 0.0) + (t2 - t1)
+        self.state = state
+        return spiked

@@ -1,0 +1,111 @@
+"""LIF neuron with exponential post-synaptic currents (NEST `iaf_psc_exp`).
+
+Exact integration (Rotter & Diesmann 1999): over one step of length h the
+sub-threshold dynamics
+
+    dV/dt    = -(V - E_L)/tau_m + (I_ex + I_in + I_dc)/C_m
+    dI_x/dt  = -I_x / tau_syn_x
+
+have the closed-form update
+
+    I_x' = P11_x * I_x                       P11_x = exp(-h/tau_x)
+    V'   = E_L + (V - E_L) P22 + I_ex P21_ex + I_in P21_in + I_dc P20
+
+    P22   = exp(-h/tau_m)
+    P21_x = (exp(-h/tau_x) - exp(-h/tau_m)) / (C_m (1/tau_m - 1/tau_x))
+    P20   = tau_m/C_m (1 - P22)
+
+Spike handling mirrors NEST: a neuron fires when V' >= V_th and it is not
+refractory; V is clamped to V_reset for `t_ref` (refractory steps), while the
+synaptic currents continue to evolve.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.params import NeuronParams
+
+
+@dataclasses.dataclass(frozen=True)
+class Propagators:
+    """Step propagators for a fixed dt. Plain floats -> baked into the jaxpr."""
+    P11_ex: float
+    P11_in: float
+    P22: float
+    P21_ex: float
+    P21_in: float
+    P20: float
+    ref_steps: int
+    V_th: float
+    V_reset: float
+    E_L: float
+
+    @staticmethod
+    def make(p: NeuronParams, dt: float) -> "Propagators":
+        p22 = float(np.exp(-dt / p.tau_m))
+
+        def p21(tau_x: float) -> float:
+            return float(
+                (np.exp(-dt / tau_x) - np.exp(-dt / p.tau_m))
+                / (p.C_m * (1.0 / p.tau_m - 1.0 / tau_x)))
+
+        return Propagators(
+            P11_ex=float(np.exp(-dt / p.tau_syn_ex)),
+            P11_in=float(np.exp(-dt / p.tau_syn_in)),
+            P22=p22,
+            P21_ex=p21(p.tau_syn_ex),
+            P21_in=p21(p.tau_syn_in),
+            P20=float(p.tau_m / p.C_m * (1.0 - p22)),
+            ref_steps=int(round(p.t_ref / dt)),
+            V_th=p.V_th,
+            V_reset=p.V_reset,
+            E_L=p.E_L,
+        )
+
+
+class NeuronState(NamedTuple):
+    V: jnp.ndarray        # [N] membrane potential, mV
+    I_ex: jnp.ndarray     # [N] excitatory synaptic current, pA
+    I_in: jnp.ndarray     # [N] inhibitory synaptic current, pA
+    refrac: jnp.ndarray   # [N] int32, remaining refractory steps
+
+
+def lif_step(state: NeuronState, prop: Propagators,
+             in_ex: jnp.ndarray, in_in: jnp.ndarray,
+             i_dc: jnp.ndarray):
+    """One exact-integration step.
+
+    `in_ex` / `in_in` are the weighted spike inputs (pA) arriving this step
+    (read from the delay ring buffer + external Poisson drive); they enter the
+    synaptic current as an instantaneous jump *after* propagation, matching
+    NEST's update order (currents are propagated, then incoming events added,
+    and the new current affects V only from the next step on -- here we follow
+    the reference implementation: V is updated with the *pre-jump* currents).
+
+    Returns (new_state, spiked[bool N]).
+    """
+    # Membrane update with currents valid during [t, t+h).
+    V_new = (prop.E_L
+             + (state.V - prop.E_L) * prop.P22
+             + state.I_ex * prop.P21_ex
+             + state.I_in * prop.P21_in
+             + i_dc * prop.P20)
+
+    # Synaptic currents decay, then absorb this step's arriving events.
+    I_ex_new = state.I_ex * prop.P11_ex + in_ex
+    I_in_new = state.I_in * prop.P11_in + in_in
+
+    refractory = state.refrac > 0
+    V_new = jnp.where(refractory, prop.V_reset, V_new)
+
+    spiked = (V_new >= prop.V_th) & ~refractory
+    V_new = jnp.where(spiked, prop.V_reset, V_new)
+    refrac_new = jnp.where(
+        spiked, prop.ref_steps,
+        jnp.maximum(state.refrac - 1, 0)).astype(state.refrac.dtype)
+
+    return NeuronState(V_new, I_ex_new, I_in_new, refrac_new), spiked

@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: causal/full GQA flash attention (online softmax).
+
+Used by the LM substrate for the prefill hot spot.  Blocked over (batch*head,
+q-block, kv-block) with the kv loop innermost; running max / denominator /
+accumulator live in VMEM scratch, so HBM traffic is one pass over Q, K, V and
+O — the O(T^2) score matrix never materialises.  Causally dead KV blocks are
+skipped via ``pl.when`` on grid indices (no MXU work, and with a constant
+index_map no extra HBM traffic either).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, scale: float, causal: bool, s_real: int,
+            block_q: int, block_k: int, nkb: int):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Causal skip: KV block j is live iff its first key index <= the last
+    # query index of block i.
+    live = (j * block_k <= i * block_q + block_q - 1) if causal else True
+
+    @pl.when(live)
+    def _attend():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)          # (bk, d)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+        col = j * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = col < s_real
+        if causal:
+            row = i * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            mask &= col <= row
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nkb - 1)
+    def _finish():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)              # fully masked rows -> 0
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "scale", "block_q", "block_k", "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           scale: float | None = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False):
+    """q: [B, Hq, T, D]; k, v: [B, Hkv, S, D]; Hq % Hkv == 0. Returns [B, Hq, T, D]."""
+    b, hq, t, d = q.shape
+    _, hkv, s, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = float(scale if scale is not None else 1.0 / (d ** 0.5))
+
+    t_pad = -(-t // block_q) * block_q
+    s_pad = -(-s // block_k) * block_k
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, t_pad - t), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, s_pad - s), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, s_pad - s), (0, 0)))
+
+    nkb = s_pad // block_k
+    grid = (b * hq, t_pad // block_q, nkb)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, scale=scale, causal=causal, s_real=s,
+            block_q=block_q, block_k=block_k, nkb=nkb),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda h, i, j: (h // hq, h % hq, i, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda h, i, j: (h // hq, (h % hq) // group, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda h, i, j: (h // hq, (h % hq) // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda h, i, j: (h // hq, h % hq, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, t_pad, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :t, :]

@@ -1,0 +1,46 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Dispatch policy: on TPU the compiled kernels run natively; everywhere else
+(this CPU container, unit tests) they run in ``interpret=True`` mode, which
+executes the same kernel body under the Pallas interpreter.  ``ref.py`` holds
+the pure-jnp oracles used by the allclose test sweeps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.neuron import NeuronState, Propagators
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.lif_update import lif_update_pallas
+from repro.kernels.spike_deliver import gated_spike_matvec_pallas
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def lif_update(state: NeuronState, prop: Propagators,
+               in_ex: jnp.ndarray, in_in: jnp.ndarray, i_dc: jnp.ndarray,
+               interpret: bool | None = None):
+    """Fused neuron update. Drop-in for core.neuron.lif_step."""
+    interpret = _interpret_default() if interpret is None else interpret
+    V, I_ex, I_in, refrac, spiked = lif_update_pallas(
+        state.V, state.I_ex, state.I_in, state.refrac, in_ex, in_in, i_dc,
+        prop=prop, interpret=interpret)
+    return NeuronState(V, I_ex, I_in, refrac), spiked
+
+
+def gated_spike_matvec(s: jnp.ndarray, W: jnp.ndarray,
+                       interpret: bool | None = None) -> jnp.ndarray:
+    """Activity-gated dense delivery. Drop-in matvec for deliver_dense."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return gated_spike_matvec_pallas(s, W, interpret=interpret)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale=None,
+                    interpret: bool | None = None):
+    """Blocked GQA attention. Drop-in for ref.mha_ref."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return flash_attention_pallas(q, k, v, causal=causal, scale=scale,
+                                  interpret=interpret)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's test sweeps shapes/dtypes and asserts allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.neuron import NeuronState, Propagators, lif_step
+
+
+def lif_update_ref(state: NeuronState, prop: Propagators,
+                   in_ex: jnp.ndarray, in_in: jnp.ndarray,
+                   i_dc: jnp.ndarray):
+    """Oracle for kernels.lif_update — exactly the engine's reference step."""
+    return lif_step(state, prop, in_ex, in_in, i_dc)
+
+
+def gated_spike_matvec_ref(s: jnp.ndarray, W: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for kernels.spike_deliver: out[d, n] = sum_p s[p] W[d, p, n]."""
+    return jnp.einsum("p,dpn->dn", s.astype(jnp.float32),
+                      W.astype(jnp.float32),
+                      preferred_element_type=jnp.float32)
+
+
+def mha_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+            causal: bool = True, scale: float | None = None) -> jnp.ndarray:
+    """Oracle for kernels.flash_attention.
+
+    q: [B, Hq, T, D], k/v: [B, Hkv, S, D] with Hq % Hkv == 0 (GQA).
+    Computation in f32 regardless of input dtype.
+    """
+    b, hq, t, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    qf = q.astype(jnp.float32).reshape(b, hkv, group, t, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bhgtd,bhsd->bhgts", qf, kf) * scale
+    if causal:
+        s = kf.shape[2]
+        mask = jnp.tril(jnp.ones((t, s), bool), k=s - t)
+        logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgts,bhsd->bhgtd", p, vf)
+    return out.reshape(b, hq, t, d).astype(q.dtype)

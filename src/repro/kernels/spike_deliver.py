@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: activity-gated delay-binned spike delivery (MXU).
+
+Dense delivery computes ``out[d, n] = sum_p s[p] * W[d, p, n]`` — a rank-1
+spike-vector x matrix product per delay bin.  At natural activity (~31 spikes
+per 0.1 ms step over 77k presynaptic neurons) the spike vector is >99.9%
+zeros, so almost every ``W`` tile contributes nothing; the cost of the naive
+matmul is pure HBM->VMEM bandwidth for streaming ``W``.
+
+This kernel translates NEST's event-driven sparsity exploitation to the TPU
+memory hierarchy (DESIGN.md section 2): a scalar-prefetch *block map* lets the
+pipeline skip fetching weight tiles whose source-spike block is all zero.
+
+* ``act[k]``  (SMEM, prefetched): 1 if presynaptic block ``k`` contains any
+  spike.  Guards the MXU work with ``pl.when``.
+* ``sel[k]``  (SMEM, prefetched): index of the last active block <= k.  The
+  ``W`` BlockSpec index_map reads ``sel`` so that *skipped* grid steps point
+  at the previously fetched tile — Pallas's pipeline recognises the repeated
+  index and issues no new HBM copy.  Expected fraction of W traffic avoided:
+  1 - (1 - (1 - rate*dt)^block_p) ~ 80% at block_p=512 and natural rates.
+
+Grid: (D, N/block_n, P/block_p), k innermost so each out tile accumulates.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(sel_ref, act_ref, s_ref, w_ref, out_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(act_ref[k] > 0)
+    def _accum():
+        s = s_ref[...].astype(jnp.float32)          # (1, bp)
+        w = w_ref[...].astype(jnp.float32)          # (1, bp, bn)
+        out_ref[...] += jnp.dot(
+            s, w[0], preferred_element_type=jnp.float32
+        ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_p", "block_n",
+                                             "interpret"))
+def gated_spike_matvec_pallas(s: jnp.ndarray, W: jnp.ndarray,
+                              *, block_p: int = 512, block_n: int = 512,
+                              interpret: bool = False) -> jnp.ndarray:
+    """``s``[P] (0/1 spikes), ``W``[D, P, N] -> out[D, N] f32."""
+    d, p, n = W.shape
+    p_pad = -(-p // block_p) * block_p
+    n_pad = -(-n // block_n) * block_n
+    s_p = jnp.pad(s.astype(jnp.float32), (0, p_pad - p))
+    W_p = jnp.pad(W, ((0, 0), (0, p_pad - p), (0, n_pad - n)))
+
+    nkb = p_pad // block_p
+    blocks = s_p.reshape(nkb, block_p)
+    act = (blocks != 0).any(axis=1).astype(jnp.int32)
+    idx = jnp.arange(nkb, dtype=jnp.int32)
+    # Last active block index <= k (0 if none yet): avoids tile refetch.
+    sel = jax.lax.associative_scan(jnp.maximum, jnp.where(act > 0, idx, -1))
+    sel = jnp.maximum(sel, 0).astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(d, n_pad // block_n, nkb),
+        in_specs=[
+            pl.BlockSpec((1, block_p), lambda di, j, k, sel, act: (0, sel[k])),
+            pl.BlockSpec((1, block_p, block_n),
+                         lambda di, j, k, sel, act: (di, sel[k], j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n),
+                               lambda di, j, k, sel, act: (di, j)),
+    )
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((d, n_pad), jnp.float32),
+        interpret=interpret,
+    )(sel, act, s_p[None, :], W_p)
+    return out[:, :n]

@@ -1,0 +1,353 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell the appropriate entry point is lowered with ShapeDtypeStruct
+inputs (nothing is allocated), compiled against the production mesh, and the
+compiled artifact is mined for:
+  * memory_analysis()  — per-device argument/output/temp bytes (fits-HBM proof)
+  * cost_analysis()    — per-device HLO FLOPs and bytes accessed
+  * the post-GSPMD HLO — per-collective byte counts (all-gather, all-reduce,
+    reduce-scatter, all-to-all, collective-permute)
+Results land in artifacts/dryrun/<arch>__<shape>__<mesh>.json; the roofline
+benchmark (benchmarks/roofline.py) consumes them.
+
+Shape kinds: train_* lowers the full train_step (grad + optimizer update),
+prefill_* lowers the forward cache-building pass, decode_*/long_* lower
+serve_step (one token against a seq_len KV cache).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch minitron-4b \
+      --shape train_4k --mesh pod1
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, SHAPES, cells, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import build
+from repro.sharding import ctx as CTX
+from repro.sharding import rules as R
+from repro.train import optim as O
+from repro.train.train_step import TrainHparams, TrainState, make_train_step
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "artifacts", "dryrun")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[^\]]*\][^ ]*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-collective-kind (count, result bytes) from post-GSPMD HLO."""
+    out = {}
+    for shape_str, kind in _COLL_RE.findall(hlo_text):
+        b = _shape_bytes(shape_str)
+        c, tot = out.get(kind, (0, 0))
+        out[kind] = (c + 1, tot + b)
+    return {k: {"count": c, "bytes": b} for k, (c, b) in out.items()}
+
+
+def wire_bytes(stats: dict) -> float:
+    """Approx bytes crossing links per device per step.
+
+    all-reduce counts 2x (reduce-scatter + all-gather phases); gather-like
+    collectives count their result size. (DESIGN.md section 7: factors are
+    the dominant-term approximation, not per-ring exact counts.)
+    """
+    total = 0.0
+    for kind, s in stats.items():
+        f = 2.0 if kind == "all-reduce" else 1.0
+        total += f * s["bytes"]
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Cell lowering
+# ---------------------------------------------------------------------------
+
+def _abstract_train_state(model, abs_params, hp):
+    lr = O.make_schedule(model.cfg.lr_schedule, hp.base_lr, hp.warmup,
+                         hp.total_steps)
+    opt = O.make_optimizer(model.cfg.optimizer, lr)
+    abs_opt = jax.eval_shape(opt.init, abs_params)
+    step = jax.ShapeDtypeStruct((), jnp.int32)
+    return TrainState(abs_params, abs_opt, step, None), opt
+
+
+def _opt_state_sharding(model, abs_opt, axes, mesh):
+    """Optimizer-state shardings derived from the param logical axes."""
+    name = model.cfg.optimizer
+    if name == "adamw":
+        sh = R.param_sharding(axes, abs_opt["m"], mesh)
+        return {"m": sh, "v": sh}
+
+    # adafactor: factored stats drop one dim of the param axes
+    def one(ax, leaf_state):
+        out = {}
+        for k, s in leaf_state.items():
+            if k == "vr":
+                a = tuple(ax[:-1])
+            elif k == "vc":
+                a = tuple(ax[:-2]) + tuple(ax[-1:])
+            else:
+                a = tuple(ax)
+            out[k] = jax.sharding.NamedSharding(
+                mesh, R.resolve(a, s.shape, mesh, R.PARAM_RULES))
+        return out
+
+    is_ax = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    return {"s": jax.tree.map(one, axes, abs_opt["s"], is_leaf=is_ax)}
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool):
+    """Returns (lowered, meta) for one dry-run cell."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = get_config(arch)
+    model = build(cfg)
+    shape = SHAPES[shape_name]
+    axes = model.logical_axes()
+    abs_params = model.abstract_params()
+    p_shard = R.param_sharding(axes, abs_params, mesh)
+    batch_specs = model.input_specs(shape)
+    b_shard = R.batch_sharding(batch_specs, mesh)
+    meta = {"params": model.param_count(),
+            "active_params": active_param_count(model)}
+
+    # Gradient-accumulation factors for the biggest trains: activation
+    # footprint scales 1/microbatches at the cost of one extra grad buffer.
+    micro = {"kimi-k2-1t-a32b": 4, "jamba-v0.1-52b": 16,
+             "deepseek-moe-16b": 8, "llama-3.2-vision-90b": 8,
+             "xlstm-1.3b": 4, "qwen3-32b": 2, "minicpm-2b": 2,
+             "phi3-medium-14b": 2}.get(arch, 1)
+
+    with CTX.use_mesh(mesh):
+        if shape.kind == "train":
+            hp = TrainHparams(microbatches=micro)
+            abs_state, opt = _abstract_train_state(model, abs_params, hp)
+            opt_shard = _opt_state_sharding(model, abs_state.opt_state,
+                                            axes, mesh)
+            s_shard = TrainState(p_shard, opt_shard, R.replicated(mesh), None)
+            step_fn = make_train_step(model, opt, hp)
+            jf = jax.jit(step_fn, in_shardings=(s_shard, b_shard),
+                         out_shardings=(s_shard, None),
+                         donate_argnums=(0,))
+            lowered = jf.lower(abs_state, batch_specs)
+        elif shape.kind == "prefill":
+            # sequence-chunked prefill bounds activation memory for the
+            # biggest model (bit-exact vs full prefill; see tests)
+            # (prefill_chunked is available but trades 12 GiB for 2.6x
+            # collectives on the 1T config — see EXPERIMENTS.md §Perf)
+            jf = jax.jit(model.prefill, in_shardings=(p_shard, b_shard))
+            lowered = jf.lower(abs_params, batch_specs)
+        else:  # decode
+            abs_caches = model.init_caches(shape.global_batch, shape.seq_len,
+                                           abstract=True)
+            c_shard = R.cache_sharding(abs_caches, mesh)
+            tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+            idx = jax.ShapeDtypeStruct((), jnp.int32)
+            jf = jax.jit(model.decode,
+                         in_shardings=(p_shard, c_shard,
+                                       R.batch_sharding(tok, mesh),
+                                       R.replicated(mesh)),
+                         out_shardings=(None, c_shard),
+                         donate_argnums=(1,))
+            lowered = jf.lower(abs_params, abs_caches, tok, idx)
+    return lowered, meta, mesh
+
+
+def lower_microcircuit(strategy: str, multi_pod: bool):
+    """Dry-run the paper's model itself: full-scale microcircuit, sharded.
+
+    event: NEST ownership scheme under shard_map (explicit spike all-gather);
+    dense: delay-binned W[D, N, N] under pjit (2-D sharded weight matmul).
+    Lowers a 100-step (10 ms biological time) sim chunk.
+    """
+    from repro.core import distributed as DD
+    from repro.core import params as MP
+    from repro.core.neuron import NeuronParams, Propagators
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    prop = Propagators.make(NeuronParams(), 0.1)
+    n = sum(MP.N_FULL.values())                       # 77169
+    n_syn = int(MP.synapse_numbers(
+        np.array([MP.N_FULL[p] for p in MP.POPULATIONS]), MP.CONN_PROBS,
+        np.array([MP.N_FULL[p] for p in MP.POPULATIONS]), 1.0).sum())
+    n_exc = sum(MP.N_FULL[p] for p in MP.POPULATIONS[:MP.N_EXC_POPS])
+    d_ring = 46
+    w_ext = MP.psc_from_psp(0.15, NeuronParams())
+    meta = {"params": n_syn, "active_params": n_syn}
+
+    if strategy == "event":
+        n_pad = -(-n // 512) * 512                    # divides 256 and 512
+        lam = n_syn / n / n_dev
+        k_loc = int(lam + 8 * lam ** 0.5 + 4)
+        sim = DD.make_sharded_step(
+            mesh, {"n_loc": n_pad // n_dev}, prop, n_exc=n_exc, w_ext=w_ext,
+            bg_rate=8.0, dt=0.1, spike_budget=512, n_steps=100)
+        state = DD.abstract_state(n_pad, n_dev, d_ring)
+        tables = DD.abstract_sharded_tables({}, n_dev, k_loc, n_pad)
+        with mesh:
+            lowered = jax.jit(sim, donate_argnums=(0,)).lower(state, tables)
+    else:
+        n_pad = -(-n // 512) * 512          # silent-neuron padding
+        sim = DD.make_dense_step(
+            mesh, prop, n=n_pad, n_exc=n_exc, w_ext=w_ext, bg_rate=8.0,
+            dt=0.1, n_steps=100)
+        state, W, aux = DD.abstract_dense(n_pad, d_ring)
+        st_sh, w_sh, aux_sh = DD.dense_shardings(mesh, state, W, aux)
+        with mesh:
+            jf = jax.jit(sim, in_shardings=(st_sh, w_sh, aux_sh),
+                         out_shardings=(st_sh, None), donate_argnums=(0,))
+            lowered = jf.lower(state, W, aux)
+    return lowered, meta, mesh
+
+
+def active_param_count(model) -> int:
+    """Params touched per token: total minus unrouted experts."""
+    cfg = model.cfg
+    total = model.param_count()
+    if not cfg.n_experts:
+        return total
+    import numpy as np
+    axes = model.logical_axes()
+    abs_p = model.abstract_params()
+    routed = sum(
+        int(np.prod(l.shape))
+        for l, a in zip(jax.tree.leaves(abs_p), jax.tree.leaves(
+            jax.tree.map(lambda x: ",".join(str(e) for e in x), axes,
+                         is_leaf=lambda x: isinstance(x, tuple))))
+        if "experts" in a)
+    return total - routed + routed * cfg.top_k // cfg.n_experts
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             out_dir: str = ART_DIR, force: bool = False) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    key = f"{arch}__{shape_name}__{mesh_name}"
+    path = os.path.join(out_dir, key + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    multi_pod = mesh_name == "pod2"
+    t0 = time.time()
+    if arch == "microcircuit":
+        lowered, meta, mesh = lower_microcircuit(shape_name, multi_pod)
+    else:
+        lowered, meta, mesh = lower_cell(arch, shape_name, multi_pod)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+    hlo = compiled.as_text()
+    # trip-count-aware analysis (cost_analysis counts scan bodies once)
+    from repro.perf.hlo_analysis import analyze_hlo
+    hc = analyze_hlo(hlo)
+
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "n_devices": mesh.devices.size,
+        "params": meta["params"], "active_params": meta["active_params"],
+        "flops_per_device": hc["flops_per_device"],
+        "bytes_accessed_per_device": hc["hbm_bytes_per_device"],
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        },
+        "collectives": hc["collectives"],
+        "cpu_bf16_promotion_bytes": hc.get("cpu_bf16_promotion_bytes", 0.0),
+        "collective_top_tags": hc.get("collective_top_tags", {}),
+        "collective_wire_bytes_per_device":
+            hc["collective_wire_bytes_per_device"],
+        "xla_cost_analysis": {
+            "flops_body_once": float(cost.get("flops", 0.0)),
+            "bytes_body_once": float(cost.get("bytes accessed", 0.0)),
+        },
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+    }
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default=None, choices=[None, "pod1", "pod2"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = ([args.arch] if args.arch
+             else list(ARCH_IDS) + ["microcircuit"])
+    meshes = [args.mesh] if args.mesh else ["pod1", "pod2"]
+    n_ok = n_fail = 0
+    for arch in archs:
+        if arch == "microcircuit":
+            shapes = [args.shape] if args.shape else ["event", "dense"]
+        else:
+            shapes = ([args.shape] if args.shape
+                      else [s.name for s in cells(arch)])
+        for shape in shapes:
+            for mesh_name in meshes:
+                key = f"{arch}__{shape}__{mesh_name}"
+                try:
+                    r = run_cell(arch, shape, mesh_name, force=args.force)
+                    gb = (r["memory"]["argument_bytes"]
+                          + r["memory"]["temp_bytes"]) / 2 ** 30
+                    print(f"OK   {key:55s} flops/dev={r['flops_per_device']:.3e} "
+                          f"mem/dev={gb:.2f}GiB "
+                          f"coll={r['collective_wire_bytes_per_device']:.3e}B "
+                          f"compile={r.get('compile_s', 0)}s", flush=True)
+                    n_ok += 1
+                except Exception as e:  # noqa: BLE001
+                    print(f"FAIL {key}: {e}", flush=True)
+                    traceback.print_exc()
+                    n_fail += 1
+    print(f"\ndry-run: {n_ok} ok, {n_fail} failed")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

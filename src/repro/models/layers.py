@@ -1,0 +1,318 @@
+"""Shared LM layer primitives (pure-JAX, functional, explicit param pytrees).
+
+Every parameter is created through ``param(...)`` which records its *logical
+sharding axes* alongside the array; ``split_tree`` separates the two pytrees
+so ``sharding.rules`` can resolve NamedShardings without a mirror spec.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ParamSpec(NamedTuple):
+    value: jnp.ndarray
+    axes: Tuple[Optional[str], ...]
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+_ABSTRACT = [False]
+_PARAM_DTYPE = [jnp.float32]
+
+
+class abstract_params:
+    """Context manager: param() yields ShapeDtypeStructs (no sampling).
+
+    Used by the dry-run so that 1T-parameter models are never materialised —
+    ``init`` becomes pure shape bookkeeping.
+    """
+
+    def __enter__(self):
+        _ABSTRACT.append(True)
+
+    def __exit__(self, *exc):
+        _ABSTRACT.pop()
+
+
+class default_param_dtype:
+    """Ambient dtype for param() calls without an explicit dtype — how
+    cfg.param_dtype reaches every layer init (e.g. bf16 for the 1T config)."""
+
+    def __init__(self, dtype):
+        self.dtype = jnp.dtype(dtype)
+
+    def __enter__(self):
+        _PARAM_DTYPE.append(self.dtype)
+
+    def __exit__(self, *exc):
+        _PARAM_DTYPE.pop()
+
+
+def param(key, shape, axes, dtype=None, scale: float = 0.02,
+          init: str = "normal") -> ParamSpec:
+    assert len(shape) == len(axes), (shape, axes)
+    if dtype is None:
+        dtype = _PARAM_DTYPE[-1]
+    if _ABSTRACT[-1]:
+        return ParamSpec(jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype)),
+                         tuple(axes))
+    if init == "normal":
+        v = scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+    elif init == "zeros":
+        v = jnp.zeros(shape, jnp.float32)
+    elif init == "ones":
+        v = jnp.ones(shape, jnp.float32)
+    elif init == "s4d":
+        v = jnp.log(jnp.broadcast_to(
+            jnp.arange(1, shape[-1] + 1, dtype=jnp.float32), shape))
+    else:
+        raise ValueError(init)
+    return ParamSpec(v.astype(dtype), tuple(axes))
+
+
+def split_tree(tree):
+    """ParamSpec tree -> (values tree, logical-axes tree)."""
+    values = jax.tree.map(lambda l: l.value, tree, is_leaf=is_spec)
+    axes = jax.tree.map(lambda l: l.axes, tree, is_leaf=is_spec)
+    return values, axes
+
+
+def stack_axes(axes_tree):
+    """Prepend the scanned 'layers' logical axis to every leaf."""
+    return jax.tree.map(lambda a: ("layers",) + tuple(a), axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def gathered(w, axes, dt):
+    """Explicit ZeRO-3 weight gather: cast + re-constrain a parameter under
+    the ACTIVATION rules, which drop the FSDP ('embed'->data) shard.  GSPMD
+    then all-gathers the (bf16) weight once per use instead of all-reducing
+    activation-sized partial sums of the contraction — measured 7x less ICI
+    traffic on the attention/MLP projections of the 1T config (§Perf)."""
+    from repro.sharding.ctx import constrain
+    return constrain(w.astype(dt), tuple(axes))
+
+
+# ---------------------------------------------------------------------------
+# Norms / rotary
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, w, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w.astype(x.dtype)
+
+
+def init_rms(key, d, dtype):
+    return {"scale": param(key, (d,), ("embed",), dtype, init="ones")}
+
+
+def rope(x, positions, theta: float):
+    """x: [..., T, H, D]; positions: broadcastable to [..., T]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # positions [..., T] -> angles [..., T, 1, half]
+    ang = positions.astype(jnp.float32)[..., None, None] * freqs
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = cos.astype(x.dtype)
+    sin = sin.astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional qk-norm, self/causal/cross, cache support)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg, cross: bool = False):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": param(ks[0], (d, h, hd), ("embed", "heads", "head_dim"),
+                    scale=0.02),
+        "wk": param(ks[1], (d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": param(ks[2], (d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": param(ks[3], (h, hd, d), ("heads", "head_dim", "embed"),
+                    scale=0.02 / (2 * cfg.n_layers) ** 0.5),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = param(ks[4], (hd,), ("head_dim",), init="ones")
+        p["k_norm"] = param(ks[5], (hd,), ("head_dim",), init="ones")
+    return p
+
+
+def _qkv(p, x, x_kv, cfg, positions, cross: bool):
+    dt = x.dtype
+    ax = ("embed", "heads", "head_dim")
+    axk = ("embed", "kv_heads", "head_dim")
+    q = jnp.einsum("btd,dhk->bthk", x, gathered(p["wq"], ax, dt))
+    k = jnp.einsum("bsd,dhk->bshk", x_kv, gathered(p["wk"], axk, dt))
+    v = jnp.einsum("bsd,dhk->bshk", x_kv, gathered(p["wv"], axk, dt))
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if not cross and cfg.use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+MHA_Q_CHUNK = 512   # query-chunked attention above this T (bounds score mem)
+
+
+def _mha_block(q, k, v, *, causal, length_mask, q_offset, scale):
+    """One query block vs full K/V. q: [B,L,H,hd]; k,v: [B,S,H,hd]."""
+    from repro.sharding.ctx import constrain
+    b, t, h, hd = q.shape
+    s = k.shape[1]
+    logits = jnp.einsum("bthd,bshd->bhts", q, k).astype(jnp.float32) * scale
+    # heads shard onto 'model' when divisible; otherwise the kv-seq dim does
+    # (context-parallel scores) — resolver picks automatically.
+    logits = constrain(logits, ("batch", "heads", None, "kv_seq"))
+    if causal:
+        rows = q_offset + jnp.arange(t)[:, None]
+        cols = jnp.arange(s)[None, :]
+        logits = jnp.where((cols <= rows)[None, None], logits, -jnp.inf)
+    if length_mask is not None:
+        logits = jnp.where(length_mask[:, None, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = constrain(probs, ("batch", "heads", None, "kv_seq"))
+    return jnp.einsum("bhts,bshd->bthd", probs.astype(v.dtype), v)
+
+
+def mha(q, k, v, *, causal: bool, length_mask: Optional[jnp.ndarray] = None,
+        q_offset=0):
+    """q: [B,T,H,hd]; k,v: [B,S,KV,hd]. f32 softmax. Returns [B,T,H,hd].
+
+    GQA K/V are expanded to H heads (keeps sharding propagation trivial:
+    the head dim stays contiguous on the 'model' axis).  Long query axes are
+    processed in chunks of MHA_Q_CHUNK under a scan so the score matrix never
+    exceeds [B, H, chunk, S] (the XLA analogue of the Pallas flash kernel's
+    blocking; the kernel itself is used on real TPUs).
+
+    ``length_mask``: [B, S] bool (valid kv positions), for decode caches.
+    ``q_offset``: global position of query 0, for causal masking vs a cache.
+    """
+    from repro.sharding.ctx import constrain
+    b, t, h, hd = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    scale = hd ** -0.5
+
+    if t == 1:
+        # decode: grouped-query einsum against the cache — no KV expansion.
+        g = h // kvh
+        q5 = q.reshape(b, 1, kvh, g, hd)
+        logits = jnp.einsum("btkgd,bskd->bkgts", q5, k).astype(jnp.float32)
+        logits = logits * scale
+        logits = constrain(logits, ("batch", "kv_heads", None, None,
+                                    "kv_seq"))
+        if length_mask is not None:
+            logits = jnp.where(length_mask[:, None, None, None, :],
+                               logits, -jnp.inf)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bkgts,bskd->btkgd", probs.astype(v.dtype), v)
+        return out.reshape(b, 1, h, hd)
+
+    if kvh != h:
+        rep = h // kvh
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+
+    if t <= MHA_Q_CHUNK:
+        return _mha_block(q, k, v, causal=causal, length_mask=length_mask,
+                          q_offset=q_offset, scale=scale)
+
+    chunk = MHA_Q_CHUNK
+    while t % chunk:          # e.g. whisper's 1500-frame encoder -> 500
+        chunk -= 1
+    nc = t // chunk
+    qs = q.reshape(b, nc, chunk, h, hd).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(off, qc):
+        o = _mha_block(qc, k, v, causal=causal, length_mask=length_mask,
+                       q_offset=q_offset + off, scale=scale)
+        return off + chunk, o
+
+    _, outs = jax.lax.scan(body, jnp.zeros((), jnp.int32), qs)
+    return outs.swapaxes(0, 1).reshape(b, t, h, hd)
+
+
+def attention(p, x, cfg, positions, *, causal=True, x_kv=None,
+              cache=None, cache_index=None):
+    """Self/cross attention.
+
+    cache: dict(k=[B,S,KV,hd], v=...) updated at ``cache_index`` when given
+    (decode); for cross-attention with a cache, k/v are read straight from it.
+    Returns (out, new_cache).
+    """
+    if x_kv is not None:
+        q, k, v = _qkv(p, x, x_kv, cfg, positions, cross=True)
+        out = mha(q, k, v, causal=False)
+        return jnp.einsum("bthk,hkd->btd", out, p["wo"].astype(x.dtype)), cache
+    q, k, v = _qkv(p, x, x, cfg, positions, cross=False)
+    if cache is None:
+        out = mha(q, k, v, causal=causal)
+        new_cache = None
+    else:
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cache_index, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cache_index, axis=1)
+        s = kc.shape[1]
+        valid = jnp.arange(s)[None, :] < (cache_index + q.shape[1])
+        valid = jnp.broadcast_to(valid, (x.shape[0], s))
+        out = mha(q, kc.astype(v.dtype), vc.astype(v.dtype), causal=True,
+                  length_mask=valid, q_offset=cache_index)
+        new_cache = {"k": kc, "v": vc}
+    wo = gathered(p["wo"], ("heads", "head_dim", "embed"), x.dtype)
+    return jnp.einsum("bthk,hkd->btd", out, wo), new_cache
+
+
+def cross_kv(p, enc_out, cfg):
+    """Precompute cross-attention K/V from encoder/image embeddings.
+
+    NOTE: weights intentionally NOT `gathered()` here — measured +16 GiB on
+    the vision cell (hoisted unsharded copies) for no collective win
+    (EXPERIMENTS.md §Perf, refuted-hypothesis log)."""
+    dt = enc_out.dtype
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(dt))
+    return {"k": k, "v": v}
+
+
+def cross_attention_cached(p, x, cfg, ckv):
+    """Cross-attn against precomputed K/V (no RoPE, not causal)."""
+    dt = x.dtype
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(dt))
+    out = mha(q, ckv["k"].astype(dt), ckv["v"].astype(dt), causal=False)
+    return jnp.einsum("bthk,hkd->btd", out, p["wo"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d, f, n_layers, act="swiglu"):
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_gate": param(ks[0], (d, f), ("embed", "mlp")),
+        "w_up": param(ks[1], (d, f), ("embed", "mlp")),
+        "w_down": param(ks[2], (f, d), ("mlp", "embed"),
+                        scale=0.02 / (2 * n_layers) ** 0.5),
+    }
+    return p
+
+
+def mlp(p, x):
+    dt = x.dtype
+    wg = gathered(p["w_gate"], ("embed", "mlp"), dt)
+    wu = gathered(p["w_up"], ("embed", "mlp"), dt)
+    wd = gathered(p["w_down"], ("mlp", "embed"), dt)
+    h = jax.nn.silu(x @ wg) * (x @ wu)
+    return h @ wd

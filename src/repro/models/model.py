@@ -1,0 +1,299 @@
+"""Model bundle: init / train-loss / prefill / decode for every arch family.
+
+``build(cfg)`` returns a ``Model`` whose methods are pure functions suitable
+for jit/pjit; ``abstract_params()`` + ``input_specs()`` supply the
+ShapeDtypeStruct stand-ins used by the multi-pod dry-run (no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+MOE_AUX_WEIGHT = 0.01
+
+
+def _encoder_cfg(cfg: ModelConfig) -> ModelConfig:
+    return dataclasses.replace(
+        cfg, n_layers=cfg.encoder_layers, encoder_layers=0, n_experts=0,
+        cross_attn_every=0, attn_every=0, xlstm=False)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.enc_cfg = _encoder_cfg(cfg) if cfg.encoder_layers else None
+
+    # ------------------------------------------------------------------ init
+    def _init_specs(self, key, abstract: bool):
+        cfg = self.cfg
+        ks = jax.random.split(key, 8)
+        ctx = L.abstract_params() if abstract else _nullcontext()
+        with L.default_param_dtype(cfg.param_dtype), ctx:
+            p: Dict[str, Any] = {
+                "embed": L.param(ks[0], (cfg.vocab_size, cfg.d_model),
+                                 ("vocab", "embed"), cfg.param_dtype),
+                "final_norm": L.init_rms(ks[1], cfg.d_model, jnp.float32),
+            }
+            if not cfg.tie_embeddings:
+                p["lm_head"] = L.param(
+                    ks[2], (cfg.d_model, cfg.vocab_size), ("embed", "vocab"),
+                    cfg.param_dtype, scale=0.02 / cfg.n_layers ** 0.5)
+            if not cfg.use_rope:
+                p["pos_embed"] = L.param(
+                    ks[3], (max(cfg.max_position, 1), cfg.d_model),
+                    ("pos", "embed"), cfg.param_dtype)
+            if self.enc_cfg:
+                ep: Dict[str, Any] = {
+                    "pos_embed": L.param(
+                        ks[4], (cfg.encoder_seq, cfg.d_model),
+                        ("pos", "embed"), cfg.param_dtype),
+                    "norm": L.init_rms(ks[5], cfg.d_model, jnp.float32),
+                }
+                p["encoder"] = ep
+        # stacks (handle their own abstract mode)
+        with L.default_param_dtype(cfg.param_dtype):
+            if abstract:
+                p["blocks"] = T.init_stack_specs(cfg, abstract=True)
+                if self.enc_cfg:
+                    p["encoder"]["blocks"] = T.init_stack_specs(
+                        self.enc_cfg, abstract=True)
+            else:
+                make, _ = T.init_stack_specs(cfg, abstract=False)
+                p["blocks"] = make(ks[6])
+                if self.enc_cfg:
+                    emake, _ = T.init_stack_specs(self.enc_cfg,
+                                                  abstract=False)
+                    p["encoder"]["blocks"] = emake(ks[7])
+        return p
+
+    def init(self, key):
+        """Concrete parameter values (smoke-test scale only)."""
+        spec = self._init_specs(key, abstract=False)
+        # stacks are already plain values; top-level leaves are ParamSpec
+        return jax.tree.map(lambda l: l.value if L.is_spec(l) else l, spec,
+                            is_leaf=L.is_spec)
+
+    def abstract_params(self):
+        spec = self._init_specs(jax.random.PRNGKey(0), abstract=True)
+        return L.split_tree(spec)[0]
+
+    def logical_axes(self):
+        spec = self._init_specs(jax.random.PRNGKey(0), abstract=True)
+        return L.split_tree(spec)[1]
+
+    def param_count(self) -> int:
+        import numpy as np
+        return int(sum(np.prod(l.shape) for l in
+                       jax.tree.leaves(self.abstract_params())))
+
+    # ------------------------------------------------------------- forwards
+    def _embed(self, p, tokens, offset=0):
+        cfg = self.cfg
+        x = p["embed"][tokens].astype(cfg.activation_dtype)
+        if not cfg.use_rope:
+            t = tokens.shape[1]
+            pos = jax.lax.dynamic_slice_in_dim(p["pos_embed"], offset, t)
+            x = x + pos.astype(x.dtype)[None]
+        return x
+
+    def _logits(self, p, x):
+        cfg = self.cfg
+        x = L.rms_norm(x, p["final_norm"]["scale"], cfg.norm_eps)
+        head = (p["embed"].T if cfg.tie_embeddings else p["lm_head"])
+        return (x.astype(jnp.float32) @ head.astype(jnp.float32))
+
+    CE_CHUNK = 512
+
+    def _ce_chunked(self, p, x, labels):
+        """Mean CE without materialising [B, T, V]: scan over seq chunks.
+
+        Per-chunk logits are [B, chunk, V] (vocab sharded over 'model'),
+        rematerialised in the backward pass.
+        """
+        from repro.sharding.ctx import constrain
+        cfg = self.cfg
+        b, t, d = x.shape
+        # prefer a chunk count matching the seq sharding (16) so the reshape
+        # keeps the 'model'-axis seq shards intact
+        if t % 16 == 0 and t // 16 <= self.CE_CHUNK:
+            chunk = t // 16
+        elif t % self.CE_CHUNK == 0:
+            chunk = self.CE_CHUNK
+        else:
+            chunk = t
+        nc = t // chunk
+        x = L.rms_norm(x, p["final_norm"]["scale"], cfg.norm_eps)
+        head = (p["embed"].T if cfg.tie_embeddings else p["lm_head"])
+        xs = (x.reshape(b, nc, chunk, d).swapaxes(0, 1),
+              labels.reshape(b, nc, chunk).swapaxes(0, 1))
+
+        @jax.checkpoint
+        def body(tot, xs_c):
+            xc, lab = xs_c
+            xc = constrain(xc, ("batch", None, None))
+            logits = jnp.einsum("btd,dv->btv", xc, head.astype(xc.dtype),
+                                preferred_element_type=jnp.float32)
+            logits = constrain(logits, ("batch", None, "vocab"))
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, lab[..., None], -1)[..., 0]
+            return tot + (logz - gold).sum(), None
+
+        tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), xs)
+        return tot / (b * t)
+
+    def _encode(self, p, enc_inputs):
+        """Whisper encoder on stubbed frame embeddings [B, S_enc, D]."""
+        cfg = self.enc_cfg
+        x = enc_inputs.astype(cfg.activation_dtype)
+        x = x + p["encoder"]["pos_embed"].astype(x.dtype)[None]
+        pos = jnp.arange(x.shape[1])
+        x, _, _ = T.stack_apply(p["encoder"]["blocks"], x, cfg, pos,
+                                mode="train", extras={"causal": False})
+        return L.rms_norm(x, p["encoder"]["norm"]["scale"], cfg.norm_eps)
+
+    def _extras(self, p, batch) -> Optional[dict]:
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return {"enc_out": self._encode(p, batch["enc_inputs"]),
+                    "causal": True}
+        if cfg.family == "vlm":
+            return {"img_embeds":
+                    batch["img_embeds"].astype(cfg.activation_dtype)}
+        return None
+
+    def loss_fn(self, p, batch):
+        """batch['tokens']: [B, T+1] int32 (+ modality extras)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        inp, labels = tokens[:, :-1], tokens[:, 1:]
+        x = self._embed(p, inp)
+        pos = jnp.arange(inp.shape[1])
+        x, _, aux = T.stack_apply(p["blocks"], x, cfg, pos, mode="train",
+                                  extras=self._extras(p, batch))
+        ce = self._ce_chunked(p, x, labels)
+        n_moe = max(1, sum(T.ffn_kind(cfg, o) == "moe"
+                           for o in range(T.group_size(cfg)))
+                    * (cfg.n_layers // T.group_size(cfg)))
+        loss = ce + MOE_AUX_WEIGHT * aux / n_moe
+        return loss, {"ce": ce, "moe_aux": aux / n_moe}
+
+    def forward_logits(self, p, batch):
+        """Full-sequence logits [B, T, V] (tests/small scale only)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self._embed(p, tokens)
+        pos = jnp.arange(tokens.shape[1])
+        x, _, _ = T.stack_apply(p["blocks"], x, cfg, pos, mode="train",
+                                extras=self._extras(p, batch))
+        return self._logits(p, x)
+
+    def prefill(self, p, batch):
+        """tokens [B, T] -> (last-token logits [B, V], caches)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self._embed(p, tokens)
+        pos = jnp.arange(tokens.shape[1])
+        x, caches, _ = T.stack_apply(p["blocks"], x, cfg, pos,
+                                     mode="prefill",
+                                     extras=self._extras(p, batch))
+        return self._logits(p, x[:, -1:])[:, 0], caches
+
+    def prefill_chunked(self, p, batch, n_chunks: int = 8):
+        """Sequence-chunked prefill: processes T in n_chunks cache-building
+        passes, bounding activation memory to one chunk (standard serving
+        practice; the dry-run uses it for the biggest prefill cells).
+
+        Self-attention/SSM families only (cross-attn caches need the full
+        encoder pass; those archs use plain prefill).
+        """
+        cfg = self.cfg
+        assert cfg.family in ("dense", "moe", "hybrid", "ssm"), cfg.family
+        tokens = batch["tokens"]
+        b, t = tokens.shape
+        while t % n_chunks:
+            n_chunks -= 1
+        chunk = t // n_chunks
+        caches = self.init_caches(b, t)
+        toks = tokens.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+
+        def body(carry, tk):
+            caches, off, _ = carry
+            x = self._embed(p, tk, offset=off)
+            pos = off + jnp.arange(chunk)
+            x, caches, _ = T.stack_apply(
+                p["blocks"], x, cfg, pos, mode="decode", caches=caches,
+                cache_index=off)
+            logits = self._logits(p, x[:, -1:])[:, 0]
+            return (caches, off + chunk, logits), None
+
+        init_logits = jnp.zeros((b, cfg.vocab_size), jnp.float32)
+        (caches, _, logits), _ = jax.lax.scan(
+            body, (caches, jnp.zeros((), jnp.int32), init_logits), toks)
+        return logits, caches
+
+    def decode(self, p, caches, tokens, index):
+        """One decode step. tokens [B, 1]; index: scalar int32 position."""
+        cfg = self.cfg
+        x = self._embed(p, tokens, offset=index)
+        pos = jnp.full((tokens.shape[0], 1), index, jnp.int32)
+        x, caches, _ = T.stack_apply(p["blocks"], x, cfg, pos, mode="decode",
+                                     caches=caches, cache_index=index)
+        return self._logits(p, x)[:, 0], caches
+
+    # --------------------------------------------------------------- caches
+    def init_caches(self, batch: int, s_max: int, abstract: bool = False):
+        cfg = self.cfg
+        G = T.group_size(cfg)
+        n_groups = cfg.n_layers // G
+        dt = cfg.activation_dtype
+
+        def one():
+            return {f"off{o}": T.init_block_cache(cfg, o, batch, s_max, dt)
+                    for o in range(G)}
+
+        proto = jax.eval_shape(one)
+        if abstract:
+            return jax.tree.map(
+                lambda l: jax.ShapeDtypeStruct((n_groups,) + tuple(l.shape),
+                                               l.dtype), proto)
+        return jax.tree.map(
+            lambda l: jnp.zeros((n_groups,) + tuple(l.shape), l.dtype), proto)
+
+    # --------------------------------------------------------- input specs
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of this cell."""
+        cfg = self.cfg
+        b, t = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        sd = jax.ShapeDtypeStruct
+        act = cfg.activation_dtype
+        if shape.kind == "train":
+            batch = {"tokens": sd((b, t + 1), i32)}
+        elif shape.kind == "prefill":
+            batch = {"tokens": sd((b, t), i32)}
+        else:  # decode: one new token against an s_max cache
+            batch = {"tokens": sd((b, 1), i32)}
+        if cfg.family == "encdec" and shape.kind != "decode":
+            batch["enc_inputs"] = sd((b, cfg.encoder_seq, cfg.d_model), act)
+        if cfg.family == "vlm" and shape.kind != "decode":
+            batch["img_embeds"] = sd((b, cfg.n_img_tokens, cfg.d_model), act)
+        return batch
+
+
+class _nullcontext:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *exc):
+        return None
+
+
+def build(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,206 @@
+"""Mixture-of-Experts: shared + routed top-k with capacity dispatch.
+
+Two execution paths with identical semantics:
+
+* ``_moe_local`` — single-mesh/CPU path: batch-row-grouped capacity dispatch
+  with a vmapped scatter (positions from a per-row cumsum).
+
+* ``_moe_ep`` — production path under ``shard_map`` (used whenever the
+  ambient mesh has a 'model' axis dividing n_experts).  Experts live on the
+  'model' axis (expert parallelism); tokens stay on their ('pod','data')
+  batch shards and are *replicated* across 'model', so each model shard
+  dispatches only the tokens routed to its local experts and the combine is
+  one psum('model').  Expert weights are FSDP-sharded over 'data' on the
+  d_model dim and gathered bf16 just-in-time (ZeRO-3) — the scatter, the
+  expert matmuls and the buffers are all shard-local, which is what GSPMD's
+  scatter partitioner cannot infer on its own (it replicates the 150 GB
+  dispatch buffer; see EXPERIMENTS.md §Perf hillclimb #1).
+
+Capacity is per (batch row, expert): C = ceil(cf * T * k / E); overflow
+tokens are dropped and counted.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def init_moe(key, cfg):
+    d, f, e = cfg.d_model, cfg.moe_d_ff or cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": L.param(ks[0], (d, e), ("embed", "experts"),
+                          dtype=jnp.float32, scale=0.02 / d ** 0.5),
+        "w_gate": L.param(ks[1], (e, d, f), ("experts", "embed", "mlp")),
+        "w_up": L.param(ks[2], (e, d, f), ("experts", "embed", "mlp")),
+        "w_down": L.param(ks[3], (e, f, d), ("experts", "mlp", "embed"),
+                          scale=0.02 / (2 * cfg.n_layers) ** 0.5),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = L.init_mlp(ks[4], d, f * cfg.n_shared_experts,
+                                 cfg.n_layers)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Routing (always in pjit — small tensors)
+# ---------------------------------------------------------------------------
+
+def _route(p, x, cfg):
+    """-> (tope, topw, safe_pos, keep, aux). All [B, T, k] (f32/i32)."""
+    from repro.sharding.ctx import constrain
+    b, t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    # f32 routing via MXU accumulation — never materialise an f32 copy of x
+    logits = jnp.einsum("btd,de->bte", x, p["router"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    logits = constrain(logits, ("batch", None, "experts"))
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, tope = jax.lax.top_k(probs, k)                          # [B,T,k]
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(max(1, -(-cfg.capacity_factor * t * k // e)))
+    flat_e = tope.reshape(b, t * k)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+    onehot = constrain(onehot, ("batch", None, "experts"))
+    pos = jnp.cumsum(onehot, axis=1) - 1
+    pos = jnp.take_along_axis(pos, flat_e[..., None], axis=2)[..., 0]
+    keep = (pos < cap).reshape(b, t, k)
+    safe_pos = jnp.where(keep, pos.reshape(b, t, k), cap - 1)
+
+    me = probs.mean(axis=(0, 1))
+    ce = jax.nn.one_hot(tope[..., 0], e,
+                        dtype=jnp.float32).mean(axis=(0, 1))
+    aux = {"lb_loss": e * jnp.sum(me * ce),
+           "dropped_frac": jnp.sum(~keep).astype(jnp.float32) / (b * t * k)}
+    return tope, topw, safe_pos, keep, cap, aux
+
+
+def _dispatch_row(x_row, e_row, pos_row, keep_row, n_exp, cap, k, dt):
+    """[T,D] tokens -> [n_exp, cap, D] buffer (one scatter per top-k slot)."""
+    d = x_row.shape[-1]
+    buf = jnp.zeros((n_exp, cap, d), dt)
+    for j in range(k):
+        vals = jnp.where(keep_row[:, j][:, None], x_row, 0).astype(dt)
+        buf = buf.at[e_row[:, j], pos_row[:, j]].add(vals, mode="drop")
+    return buf
+
+
+def _combine_row(ob_row, e_row, pos_row, keep_row, w_row, k):
+    """Weighted top-k combine in the activation dtype (an f32 accumulator
+    would drag f32 cotangents through every dispatch buffer — 2x memory)."""
+    t, d = e_row.shape[0], ob_row.shape[-1]
+    dt = ob_row.dtype
+    acc = jnp.zeros((t, d), dt)
+    for j in range(k):
+        g = ob_row[e_row[:, j], pos_row[:, j]]
+        g = jnp.where(keep_row[:, j][:, None], g, 0)
+        acc = acc + g * w_row[:, j][:, None].astype(dt)
+    return acc
+
+
+def _expert_ffn(buf, wg, wu, wd, dt):
+    h = (jax.nn.silu(jnp.einsum("...ecd,edf->...ecf", buf, wg))
+         * jnp.einsum("...ecd,edf->...ecf", buf, wu))
+    return jnp.einsum("...ecf,efd->...ecd", h, wd)
+
+
+# ---------------------------------------------------------------------------
+# Paths
+# ---------------------------------------------------------------------------
+
+def _moe_local(p, x, cfg, routing):
+    tope, topw, safe_pos, keep, cap, aux = routing
+    b, t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    dt = x.dtype
+    buf = jax.vmap(lambda xr, er, pr, kr: _dispatch_row(
+        xr, er, pr, kr, e, cap, k, dt))(x, tope, safe_pos, keep)
+    out_buf = _expert_ffn(buf, p["w_gate"].astype(dt), p["w_up"].astype(dt),
+                          p["w_down"].astype(dt), dt)
+    comb = jax.vmap(lambda ob, er, pr, kr, wr: _combine_row(
+        ob, er, pr, kr, wr, k))(out_buf, tope, safe_pos, keep, topw)
+    return comb.astype(dt)
+
+
+def _moe_ep(p, x, cfg, routing, mesh):
+    """Expert-parallel shard_map path (see module docstring)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    tope, topw, safe_pos, keep, cap, aux = routing
+    b, t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    dt = x.dtype
+    names = mesh.axis_names
+    ba = tuple(a for a in ("pod", "data") if a in names)
+    msize = mesh.shape["model"]
+    e_loc = e // msize
+
+    bspec = P(ba, None, None) if ba else P(None, None, None)
+    kspec = P(ba, None, None) if ba else P(None, None, None)
+
+    def body(xb, te, tw, sp, kp, wg, wu, wd):
+        midx = jax.lax.axis_index("model")
+        # ZeRO-3: gather my experts' weights over the FSDP ('data') axis.
+        if "data" in names:
+            wg = jax.lax.all_gather(wg.astype(dt), "data", axis=1,
+                                    tiled=True)
+            wu = jax.lax.all_gather(wu.astype(dt), "data", axis=1,
+                                    tiled=True)
+            wd = jax.lax.all_gather(wd.astype(dt), "data", axis=2,
+                                    tiled=True)
+        else:
+            wg, wu, wd = (w.astype(dt) for w in (wg, wu, wd))
+        e0 = midx * e_loc
+        local = kp & (te >= e0) & (te < e0 + e_loc)
+        e_l = jnp.clip(te - e0, 0, e_loc - 1)
+        buf = jax.vmap(lambda xr, er, pr, kr: _dispatch_row(
+            xr, er, pr, kr, e_loc, cap, k, dt))(xb, e_l, sp, local)
+        out_buf = _expert_ffn(buf, wg, wu, wd, dt)
+        y = jax.vmap(lambda ob, er, pr, kr, wr: _combine_row(
+            ob, er, pr, kr, wr, k))(out_buf, e_l, sp, local, tw)
+        # tokens routed to remote experts were zeros here -> sum shards
+        return jax.lax.psum(y.astype(dt), "model")
+
+    wspec_in = P("model", "data" if "data" in names else None, None)
+    wspec_out = P("model", None, "data" if "data" in names else None)
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(bspec, kspec, kspec, kspec, kspec,
+                  wspec_in, wspec_in, wspec_out),
+        out_specs=bspec,
+        check_rep=False)
+    return fn(x, tope, topw, safe_pos, keep,
+              p["w_gate"], p["w_up"], p["w_down"]).astype(dt)
+
+
+def moe(p, x, cfg) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: [B, T, D] -> (out [B, T, D], aux with load-balance loss)."""
+    from repro.sharding.ctx import current_mesh
+    routing = _route(p, x, cfg)
+    aux = routing[-1]
+    mesh = current_mesh()
+    use_ep = (mesh is not None and "model" in mesh.axis_names
+              and cfg.n_experts % mesh.shape["model"] == 0
+              and all(x.shape[0] % s == 0 or s == 1 for s in
+                      [_batch_extent(mesh)]))
+    if use_ep:
+        out = _moe_ep(p, x, cfg, routing, mesh)
+    else:
+        out = _moe_local(p, x, cfg, routing)
+    if "shared" in p:
+        out = out + L.mlp(p["shared"], x)
+    return out, aux
+
+
+def _batch_extent(mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n

@@ -1,0 +1,151 @@
+"""Mamba (S6 selective-scan) block for the Jamba hybrid.
+
+The selective scan ``h_t = a_t * h_{t-1} + b_t`` (elementwise in the
+[d_inner, d_state] plane) is computed *chunkwise*: within a chunk of L steps
+an associative scan runs in parallel (MXU/VPU friendly), chunks are chained
+by a ``lax.scan`` carrying only the [B, d_inner, d_state] boundary state.
+This bounds the materialised state history to one chunk — the memory shape
+that makes the 500k-token dry-run fit — and is the TPU analogue of Mamba's
+fused CUDA kernel (DESIGN.md section 2: chunking for VMEM, not SRAM).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+_CHUNK = 128
+
+
+def init_mamba(key, cfg):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    ds = cfg.ssm_d_state
+    dc = cfg.ssm_d_conv
+    dt_rank = max(1, -(-d // 16))
+    ks = jax.random.split(key, 8)
+    return {
+        "in_proj": L.param(ks[0], (d, 2 * di), ("embed", "mlp")),
+        "conv_w": L.param(ks[1], (dc, di), ("conv", "mlp"), scale=0.5),
+        "conv_b": L.param(ks[2], (di,), ("mlp",), init="zeros"),
+        "x_proj": L.param(ks[3], (di, dt_rank + 2 * ds), ("mlp", "state")),
+        "dt_proj_w": L.param(ks[4], (dt_rank, di), ("state", "mlp"),
+                             scale=dt_rank ** -0.5),
+        "dt_proj_b": L.param(ks[5], (di,), ("mlp",), init="zeros"),
+        # S4D-real initialisation for A.
+        "A_log": L.param(ks[3], (di, ds), ("mlp", "state"), init="s4d"),
+        "D": L.param(ks[6], (di,), ("mlp",), init="ones"),
+        "out_proj": L.param(ks[7], (di, d), ("mlp", "embed"),
+                            scale=0.02 / (2 * cfg.n_layers) ** 0.5),
+    }
+
+
+def _selective_scan(dt, xc, Bmat, Cmat, A, h0):
+    """Fused chunked selective scan.
+
+    dt, xc: [B, T, di] (f32 / activation); Bmat, Cmat: [B, T, ds];
+    A: [di, ds]; h0: [B, di, ds] f32.
+    Returns (y [B, T, di] f32, h_T).  The [B, L, di, ds] state tensor only
+    ever exists for one chunk (L = _CHUNK); the chunk body is rematerialised
+    in the backward pass so residuals stay O(B*L*di).
+    """
+    B, T, di = dt.shape
+    ds = A.shape[1]
+    chunk = min(_CHUNK, T)
+    assert T % chunk == 0, (T, chunk)
+    nc = T // chunk
+
+    from repro.sharding.ctx import constrain
+
+    def c(x):  # [B, T, ...] -> [nc, B, L, ...]
+        return x.reshape(B, nc, chunk, *x.shape[2:]).swapaxes(0, 1)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    @jax.checkpoint
+    def chunk_step(h, xs):
+        dt_i, xc_i, B_i, C_i = xs                       # [B, L, ...]
+        dt_i = constrain(dt_i, ("batch", None, "mlp"))
+        xc_i = constrain(xc_i, ("batch", None, "mlp"))
+        # The recurrence is elementwise over d_inner: TP over 'mlp' makes the
+        # whole scan communication-free.
+        a = jnp.exp(dt_i[..., None] * A)                # [B, L, di, ds]
+        b = (dt_i * xc_i.astype(jnp.float32))[..., None] * \
+            B_i.astype(jnp.float32)[..., None, :]
+        a = constrain(a, ("batch", None, "mlp", None))
+        b = constrain(b, ("batch", None, "mlp", None))
+        acc_a, acc_b = jax.lax.associative_scan(combine, (a, b), axis=1)
+        h_all = acc_a * h[:, None] + acc_b              # fold in carry
+        h_all = constrain(h_all, ("batch", None, "mlp", None))
+        y = jnp.einsum("blds,bls->bld", h_all, C_i.astype(jnp.float32))
+        return h_all[:, -1], y
+
+    h_T, y_chunks = jax.lax.scan(
+        chunk_step, h0, (c(dt), c(xc), c(Bmat), c(Cmat)))
+    y = y_chunks.swapaxes(0, 1).reshape(B, T, di)
+    return y, h_T
+
+
+def _ssm_inner(p, xz, cfg, conv_state, ssm_state):
+    """Shared train/decode core after in_proj.
+
+    xz: [B, T, 2*di]; conv_state: [B, dc-1, di] or None (train pads with 0).
+    Returns (y [B,T,di] gated, new_conv_state, new_ssm_state).
+    """
+    di = p["D"].shape[0]
+    ds = p["A_log"].shape[1]
+    dt_rank = p["dt_proj_w"].shape[0]
+    x, z = xz[..., :di], xz[..., di:]
+    dt_ = x.dtype
+
+    # causal depthwise conv
+    dc = p["conv_w"].shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((x.shape[0], dc - 1, di), dt_)
+    from repro.sharding.ctx import constrain
+    xin = jnp.concatenate([conv_state, x], axis=1)
+    new_conv_state = xin[:, -(dc - 1):] if dc > 1 else conv_state
+    xc = p["conv_b"].astype(dt_) * jnp.ones_like(x)
+    for i in range(dc):  # depthwise causal conv as dc shifted FMAs
+        xc = xc + xin[:, i:i + x.shape[1]] * p["conv_w"][i].astype(dt_)
+    xc = jax.nn.silu(constrain(xc, ("batch", None, "mlp")))
+
+    proj = xc @ p["x_proj"].astype(dt_)                 # [B,T,rank+2ds]
+    dtr, Bmat, Cmat = jnp.split(proj, [dt_rank, dt_rank + ds], axis=-1)
+    dt = jax.nn.softplus(
+        dtr @ p["dt_proj_w"].astype(dt_) + p["dt_proj_b"].astype(dt_)
+    ).astype(jnp.float32)                               # [B,T,di]
+    A = -jnp.exp(p["A_log"])                            # [di, ds]
+
+    if ssm_state is None:
+        ssm_state = jnp.zeros((x.shape[0], di, ds), jnp.float32)
+    y, h_T = _selective_scan(dt, xc, Bmat, Cmat, A, ssm_state)
+    y = y.astype(dt_) + p["D"].astype(dt_) * xc
+    return y * jax.nn.silu(z), new_conv_state, h_T
+
+
+def mamba(p, x, cfg, state=None):
+    """x: [B,T,D]. state: None (train/prefill from scratch) or
+    {"conv": [B,dc-1,di], "ssm": [B,di,ds]} for decode. Returns (out, state')."""
+    from repro.sharding.ctx import constrain
+    dt_ = x.dtype
+    w_in = L.gathered(p["in_proj"], ("embed", "mlp"), dt_)
+    xz = constrain(x @ w_in, ("batch", None, "mlp"))
+    conv_s = state["conv"] if state else None
+    ssm_s = state["ssm"].astype(jnp.float32) if state else None
+    y, conv_s2, ssm_s2 = _ssm_inner(p, xz, cfg, conv_s, ssm_s)
+    out = y @ L.gathered(p["out_proj"], ("mlp", "embed"), dt_)
+    new_state = {"conv": conv_s2, "ssm": ssm_s2}
+    return out, new_state
+
+
+def init_mamba_state(cfg, batch, dtype):
+    di = cfg.ssm_expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_d_conv - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, cfg.ssm_d_state), jnp.float32),
+    }

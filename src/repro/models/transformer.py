@@ -1,0 +1,268 @@
+"""Stack assembly: heterogeneous block patterns under a homogeneous scan.
+
+Layer patterns (attn/mamba interleave, MoE cadence, cross-attn cadence,
+sLSTM cadence) are periodic with period G = ``group_size(cfg)``; parameters
+are stored per *offset* within the group, stacked over the ``n_layers / G``
+group repeats, and the stack is applied with one ``lax.scan`` over groups —
+compile time is O(G), not O(n_layers), which is what makes the 100-layer
+dry-runs compile in minutes on one CPU core.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models import xlstm as X
+
+
+def group_size(cfg) -> int:
+    g = 1
+    for k in (cfg.attn_every, cfg.moe_every, cfg.cross_attn_every,
+              cfg.slstm_every if cfg.xlstm else 0):
+        if k:
+            g = math.lcm(g, k)
+    assert cfg.n_layers % g == 0, (cfg.name, cfg.n_layers, g)
+    return g
+
+
+def block_kind(cfg, off: int) -> str:
+    """Mixer type at layer offset ``off`` (pattern is G-periodic)."""
+    if cfg.xlstm:
+        return "slstm" if off % cfg.slstm_every == 0 else "mlstm"
+    if cfg.encoder_layers:
+        return "encdec"                  # decoder block: self + cross attn
+    if cfg.is_cross_layer(off):
+        return "cross"
+    if not cfg.is_attn_layer(off):
+        return "mamba"
+    return "attn"
+
+
+def ffn_kind(cfg, off: int) -> Optional[str]:
+    if cfg.xlstm:
+        return None                       # gated proj inside the block
+    if cfg.n_experts and cfg.is_moe_layer(off):
+        return "moe"
+    return "mlp" if cfg.d_ff else None
+
+
+# ---------------------------------------------------------------------------
+# Single block (one layer at a given offset)
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg, off: int, cross_only_self: bool = False):
+    kind = block_kind(cfg, off)
+    fk = ffn_kind(cfg, off)
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {"norm1": L.init_rms(ks[0], cfg.d_model, jnp.float32)}
+    if kind == "attn":
+        p["mixer"] = L.init_attention(ks[1], cfg)
+    elif kind == "encdec":
+        p["mixer"] = L.init_attention(ks[1], cfg)
+        p["cross"] = L.init_attention(ks[4], cfg, cross=True)
+        p["norm_x"] = L.init_rms(ks[5], cfg.d_model, jnp.float32)
+    elif kind == "cross":
+        p["mixer"] = L.init_attention(ks[1], cfg, cross=True)
+        p["gate_attn"] = L.param(ks[4], (), (), init="zeros")
+        p["gate_ffn"] = L.param(ks[5], (), (), init="zeros")
+    elif kind == "mamba":
+        p["mixer"] = S.init_mamba(ks[1], cfg)
+    elif kind == "mlstm":
+        p["mixer"] = X.init_mlstm(ks[1], cfg)
+    elif kind == "slstm":
+        p["mixer"] = X.init_slstm(ks[1], cfg)
+    if fk is not None:
+        p["norm2"] = L.init_rms(ks[2], cfg.d_model, jnp.float32)
+        p["ffn"] = (M.init_moe(ks[3], cfg) if fk == "moe"
+                    else L.init_mlp(ks[3], cfg.d_model, cfg.d_ff,
+                                    cfg.n_layers))
+    return p
+
+
+def init_block_cache(cfg, off: int, batch: int, s_max: int, dtype):
+    """Decode-cache pytree for one block."""
+    kind = block_kind(cfg, off)
+    kv, hd = cfg.n_kv_heads, cfg.head_dim_
+    if kind == "attn":
+        return {"k": jnp.zeros((batch, s_max, kv, hd), dtype),
+                "v": jnp.zeros((batch, s_max, kv, hd), dtype)}
+    if kind == "encdec":
+        return {"k": jnp.zeros((batch, s_max, kv, hd), dtype),
+                "v": jnp.zeros((batch, s_max, kv, hd), dtype),
+                "ck": jnp.zeros((batch, cfg.encoder_seq, kv, hd), dtype),
+                "cv": jnp.zeros((batch, cfg.encoder_seq, kv, hd), dtype)}
+    if kind == "cross":
+        n_img = cfg.n_img_tokens
+        return {"ck": jnp.zeros((batch, n_img, kv, hd), dtype),
+                "cv": jnp.zeros((batch, n_img, kv, hd), dtype)}
+    if kind == "mamba":
+        return S.init_mamba_state(cfg, batch, dtype)
+    if kind == "mlstm":
+        return X.init_mlstm_state(cfg, batch)
+    if kind == "slstm":
+        return X.init_slstm_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def apply_block(p, x, cfg, off: int, positions, *, mode: str,
+                cache=None, cache_index=None, extras=None):
+    """mode: 'train' (no cache io) | 'prefill' (emit cache) | 'decode'.
+
+    Returns (x, cache_out, aux_lb_loss).
+    """
+    kind = block_kind(cfg, off)
+    fk = ffn_kind(cfg, off)
+    aux = jnp.zeros((), jnp.float32)
+    h = L.rms_norm(x, p["norm1"]["scale"], cfg.norm_eps)
+    cache_out = None
+
+    if kind in ("attn", "encdec"):
+        causal = extras.get("causal", True) if extras else True
+        if mode == "train":
+            y, _ = L.attention(p["mixer"], h, cfg, positions, causal=causal)
+        elif mode == "prefill":
+            q, k, v = L._qkv(p["mixer"], h, h, cfg, positions, cross=False)
+            y = L.mha(q, k, v, causal=causal)
+            wo = L.gathered(p["mixer"]["wo"],
+                            ("heads", "head_dim", "embed"), x.dtype)
+            y = jnp.einsum("bthk,hkd->btd", y, wo)
+            cache_out = {"k": k, "v": v}
+        else:  # decode
+            y, cache_out = L.attention(p["mixer"], h, cfg, positions,
+                                       causal=True, cache=cache,
+                                       cache_index=cache_index)
+        x = x + y
+        if kind == "encdec":
+            hx = L.rms_norm(x, p["norm_x"]["scale"], cfg.norm_eps)
+            if mode == "decode":
+                ckv = {"k": cache["ck"], "v": cache["cv"]}
+                cache_out = dict(cache_out, ck=cache["ck"], cv=cache["cv"])
+            else:
+                ckv = L.cross_kv(p["cross"], extras["enc_out"], cfg)
+                if mode == "prefill":
+                    cache_out = dict(cache_out, ck=ckv["k"], cv=ckv["v"])
+            x = x + L.cross_attention_cached(p["cross"], hx, cfg, ckv)
+    elif kind == "cross":
+        if mode == "decode":
+            ckv = {"k": cache["ck"], "v": cache["cv"]}
+            cache_out = cache
+        else:
+            ckv = L.cross_kv(p["mixer"], extras["img_embeds"], cfg)
+            if mode == "prefill":
+                cache_out = {"ck": ckv["k"], "cv": ckv["v"]}
+        y = L.cross_attention_cached(p["mixer"], h, cfg, ckv)
+        x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * y
+    elif kind == "mamba":
+        y, st = S.mamba(p["mixer"], h, cfg,
+                        state=cache if mode == "decode" else None)
+        if mode != "train":
+            cache_out = st
+        x = x + y
+    elif kind == "mlstm":
+        y, st = X.mlstm(p["mixer"], h, cfg,
+                        state=cache if mode == "decode" else None)
+        if mode != "train":
+            cache_out = st
+        x = x + y
+    elif kind == "slstm":
+        y, st = X.slstm(p["mixer"], h, cfg,
+                        state=cache if mode == "decode" else None)
+        if mode != "train":
+            cache_out = st
+        x = x + y
+
+    if fk is not None:
+        h2 = L.rms_norm(x, p["norm2"]["scale"], cfg.norm_eps)
+        if fk == "moe":
+            y2, moe_aux = M.moe(p["ffn"], h2, cfg)
+            aux = aux + moe_aux["lb_loss"]
+        else:
+            y2 = L.mlp(p["ffn"], h2)
+        if kind == "cross":
+            y2 = jnp.tanh(p["gate_ffn"]).astype(x.dtype) * y2
+        x = x + y2
+    return x, cache_out, aux
+
+
+# ---------------------------------------------------------------------------
+# Stack = scan over groups of G blocks
+# ---------------------------------------------------------------------------
+
+def init_stack_specs(cfg, abstract: bool):
+    """ParamSpec tree for the decoder stack: {'off<k>': leaves stacked over
+    n_groups}. ``abstract`` skips sampling (ShapeDtypeStruct leaves)."""
+    G = group_size(cfg)
+    n_groups = cfg.n_layers // G
+
+    def one_group(key):
+        ks = jax.random.split(key, G)
+        return {f"off{o}": init_block(ks[o], cfg, o) for o in range(G)}
+
+    if abstract:
+        with L.abstract_params():
+            spec = one_group(jax.random.PRNGKey(0))
+        def lift(ps):
+            v = ps.value
+            return L.ParamSpec(
+                jax.ShapeDtypeStruct((n_groups,) + tuple(v.shape), v.dtype),
+                ("layers",) + tuple(ps.axes))
+        return jax.tree.map(lift, spec, is_leaf=L.is_spec)
+
+    def values(key):
+        return L.split_tree(one_group(key))[0]
+
+    def make(key):
+        keys = jax.random.split(key, n_groups)
+        return jax.vmap(values)(keys)
+
+    # axes from a single abstract pass
+    axes = L.split_tree(init_stack_specs(cfg, abstract=True))[1]
+    return make, axes
+
+
+def stack_apply(blocks, x, cfg, positions, *, mode: str, caches=None,
+                cache_index=None, extras=None):
+    """Run all n_layers. ``blocks``: stacked param values tree.
+
+    Returns (x, caches_out_or_None, total_aux).
+    """
+    G = group_size(cfg)
+
+    from repro.sharding.ctx import constrain
+
+    def body(x, xs):
+        bp, bc = xs
+        x = constrain(x, ("batch", "seq", None))
+        new_c = {} if mode != "train" else None
+        aux = jnp.zeros((), jnp.float32)
+        for o in range(G):
+            c_in = bc[f"off{o}"] if bc is not None else None
+            x, c_out, a = apply_block(
+                bp[f"off{o}"], x, cfg, o, positions, mode=mode,
+                cache=c_in, cache_index=cache_index, extras=extras)
+            aux = aux + a
+            if mode != "train":
+                new_c[f"off{o}"] = c_out
+        ys = (new_c, aux) if mode != "train" else (aux,)
+        return x, ys
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    elif cfg.remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    xs = (blocks, caches) if mode != "train" else (blocks, None)
+    x, ys = jax.lax.scan(body, x, xs)
+    if mode != "train":
+        caches_out, auxs = ys
+        return x, caches_out, auxs.sum()
+    (auxs,) = ys
+    return x, None, auxs.sum()

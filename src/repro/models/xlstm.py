@@ -1,0 +1,255 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM training/prefill uses the stabilised *quadratic* parallel form of the
+xLSTM paper (eq. 31-36): a gate-decay matrix D modulates q k^T — one masked
+matmul per block, MXU-friendly.  Decode uses the O(1) recurrent form with the
+matrix state C [H, dh, dh], which is what makes ``long_500k`` run for this
+family.  sLSTM is inherently sequential (recurrent weights), so training runs
+a time scan; it appears on every ``slstm_every``-th layer only.
+
+d_ff == 0 in the assigned config: the gated up/down projection (factor 2)
+lives inside the block, as in the reference architecture.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+_QUAD_CHUNK = 256  # quadratic-form chunk (keeps T x T blocks VMEM-sized)
+
+
+def _heads(cfg):
+    h = cfg.n_heads
+    dh = cfg.head_dim_
+    return h, dh
+
+
+def init_mlstm(key, cfg):
+    d = cfg.d_model
+    h, dh = _heads(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "up": L.param(ks[0], (d, 2 * d), ("embed", "mlp")),
+        "wq": L.param(ks[1], (d, h, dh), ("embed", "heads", "head_dim")),
+        "wk": L.param(ks[2], (d, h, dh), ("embed", "heads", "head_dim")),
+        "wv": L.param(ks[3], (d, h, dh), ("embed", "heads", "head_dim")),
+        "wi": L.param(ks[4], (d, h), ("embed", "heads"), scale=0.01),
+        "wf": L.param(ks[5], (d, h), ("embed", "heads"), scale=0.01),
+        "wo_gate": L.param(ks[6], (d, h, dh), ("embed", "heads", "head_dim")),
+        "down": L.param(ks[7], (d, d), ("mlp", "embed"),
+                        scale=0.02 / (2 * cfg.n_layers) ** 0.5),
+    }
+
+
+def mlstm(p, x, cfg, state=None):
+    """x: [B,T,D]. state None => parallel quadratic form (train/prefill);
+    else recurrent decode with state {"C":[B,H,dh,dh],"n":[B,H,dh],"m":[B,H]}.
+    Returns (out, new_state)."""
+    dt_ = x.dtype
+    b, t, d = x.shape
+    h, dh = _heads(cfg)
+    u = x @ p["up"].astype(dt_)
+    a, g = u[..., :d], u[..., d:]
+
+    from repro.sharding.ctx import constrain
+    # batch-sharded only: the chunk scan would reshard a 'model'-sharded
+    # time axis on every chunk (see sLSTM note below)
+    cba = lambda x: constrain(x, ("batch", None, "heads", None))
+    q = cba(jnp.einsum("btd,dhk->bthk", a, p["wq"].astype(dt_))) * dh ** -0.5
+    k = cba(jnp.einsum("btd,dhk->bthk", a, p["wk"].astype(dt_)))
+    v = cba(jnp.einsum("btd,dhk->bthk", a, p["wv"].astype(dt_)))
+    o = jax.nn.sigmoid(jnp.einsum("btd,dhk->bthk", a, p["wo_gate"].astype(dt_)))
+    log_i = (a @ p["wi"].astype(dt_)).astype(jnp.float32)          # [B,T,H]
+    log_f = -jax.nn.softplus(
+        -(a @ p["wf"].astype(dt_)).astype(jnp.float32))            # log sig
+
+    if state is None or t > 1:
+        # train / (chunked) prefill: chunkwise-parallel from state (zeros
+        # when starting fresh)
+        y, new_state = _mlstm_chunkwise(
+            q, k, v, log_i, log_f,
+            state if state is not None else init_mlstm_state(cfg, b))
+    else:
+        C, n, m = state["C"], state["n"], state["m"]               # [B,H,...]
+        li, lf = log_i[:, 0], log_f[:, 0]                          # [B,H]
+        m_new = jnp.maximum(lf + m, li)
+        fp = jnp.exp(lf + m - m_new)[..., None]
+        ip = jnp.exp(li - m_new)[..., None]
+        k0 = k[:, 0].astype(jnp.float32)
+        v0 = v[:, 0].astype(jnp.float32)
+        C = fp[..., None] * C + ip[..., None] * \
+            jnp.einsum("bhk,bhl->bhkl", v0, k0)
+        n = fp * n + ip * k0
+        q0 = q[:, 0].astype(jnp.float32)
+        num = jnp.einsum("bhkl,bhl->bhk", C, q0)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q0)),
+                          jnp.exp(-m_new))[..., None]
+        y = (num / den)[:, None]                                   # [B,1,H,dh]
+        new_state = {"C": C, "n": n, "m": m_new}
+
+    y = (y.astype(dt_) * o)
+    y = y.reshape(b, t, h * dh)
+    out = (y * jax.nn.silu(g)) @ p["down"].astype(dt_)
+    return out, new_state
+
+
+def init_mlstm_state(cfg, batch):
+    h, dh = _heads(cfg)
+    return {"C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, h, dh), jnp.float32),
+            "m": jnp.full((batch, h), -1e30, jnp.float32)}
+
+
+def _mlstm_chunkwise(q, k, v, log_i, log_f, state0):
+    """Chunkwise-parallel stabilised mLSTM (train/prefill).
+
+    q,k,v: [B,T,H,dh]; log_i, log_f: [B,T,H] f32.  Quadratic work only within
+    a chunk of L=_QUAD_CHUNK; the matrix memory (C, n, m) is carried across
+    chunks by a scan — O(T) total, state-ready for decode at the end.
+    """
+    b, t, h, dh = q.shape
+    L = _QUAD_CHUNK if t % _QUAD_CHUNK == 0 else t
+    nc = t // L
+    csh = lambda x: x.reshape(b, nc, L, *x.shape[2:]).swapaxes(0, 1)
+    qs, ks_, vs = csh(q.astype(jnp.float32)), csh(k.astype(jnp.float32)), \
+        csh(v.astype(jnp.float32))
+    lis, lfs = csh(log_i), csh(log_f)
+
+    mask = jnp.tril(jnp.ones((L, L), bool))
+
+    @jax.checkpoint
+    def chunk(carry, xs):
+        C0, n0, m0 = carry                       # [B,H,dh,dh],[B,H,dh],[B,H]
+        qc, kc, vc, li, lf = xs                  # [B,L,...]
+        F = jnp.cumsum(lf, axis=1)               # [B,L,H] local log-decay
+        # intra-chunk pair log-weights d[t, j] = F_t - F_j + i_j
+        dmat = F[:, :, None, :] - F[:, None, :, :] + li[:, None, :, :]
+        dmat = jnp.where(mask[None, :, :, None], dmat, -jnp.inf)
+        b_t = F + m0[:, None, :]                 # boundary-term log-scale
+        m_t = jnp.maximum(dmat.max(axis=2), b_t)          # [B,L,H]
+        dexp = jnp.exp(dmat - m_t[:, :, None, :])         # [B,L,L,H]
+        bexp = jnp.exp(b_t - m_t)                         # [B,L,H]
+
+        scores = jnp.einsum("bihk,bjhk->bijh", qc, kc) * dexp
+        inter_num = jnp.einsum("bhkl,bihl->bihk", C0, qc) * bexp[..., None]
+        num = jnp.einsum("bijh,bjhk->bihk", scores, vc) + inter_num
+        den_intra = scores.sum(axis=2)                    # [B,L,H]
+        den_inter = jnp.einsum("bhk,bihk->bih", n0, qc) * bexp
+        den = jnp.maximum(jnp.abs(den_intra + den_inter), jnp.exp(-m_t))
+        y = num / den[..., None]
+
+        # end-of-chunk state
+        FL = F[:, -1]                                     # [B,H]
+        s_j = FL[:, None, :] - F + li                     # [B,L,H]
+        m_new = jnp.maximum(FL + m0, s_j.max(axis=1))
+        w_j = jnp.exp(s_j - m_new[:, None, :])
+        C = (jnp.exp(FL + m0 - m_new)[..., None, None] * C0
+             + jnp.einsum("bjh,bjhk,bjhl->bhkl", w_j, vc, kc))
+        n = (jnp.exp(FL + m0 - m_new)[..., None] * n0
+             + jnp.einsum("bjh,bjhk->bhk", w_j, kc))
+        return (C, n, m_new), y
+
+    (C, n, m), ys = jax.lax.scan(chunk, (state0["C"], state0["n"],
+                                         state0["m"]),
+                                 (qs, ks_, vs, lis, lfs))
+    y = ys.swapaxes(0, 1).reshape(b, t, h, dh)
+    return y, {"C": C, "n": n, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg):
+    d = cfg.d_model
+    h, dh = _heads(cfg)
+    ks = jax.random.split(key, 10)
+    p = {"up": L.param(ks[0], (d, 2 * d), ("embed", "mlp")),
+         "down": L.param(ks[1], (d, d), ("mlp", "embed"),
+                         scale=0.02 / (2 * cfg.n_layers) ** 0.5)}
+    for i, gate in enumerate(("z", "i", "f", "o")):
+        p[f"w_{gate}"] = L.param(ks[2 + i], (d, h, dh),
+                                 ("embed", "heads", "head_dim"))
+        # 'rec_in' shards the contracted dim over 'model': the per-timestep
+        # gradient reduce then moves [B,H,dh]-sized partials instead of
+        # R-sized ones (see EXPERIMENTS.md §Perf, xlstm iteration 2)
+        p[f"r_{gate}"] = L.param(ks[6 + i], (h, dh, dh),
+                                 ("heads", "rec_in", "head_dim"),
+                                 scale=dh ** -0.5)
+    return p
+
+
+def _slstm_cell(p, xt, state, dt_):
+    """xt: [B,H,dh] pre-projected inputs per gate dict; state c,n,h,m [B,H,dh|..]."""
+    from repro.sharding.ctx import constrain
+    c, n, hid, m = state
+
+    def gate(name):
+        return (xt[name]
+                + jnp.einsum("bhk,hkl->bhl", hid, p[f"r_{name}"].astype(dt_))
+                ).astype(jnp.float32)
+    z = jnp.tanh(gate("z"))
+    lf = -jax.nn.softplus(-gate("f"))        # log sigmoid(f)
+    li = gate("i")                           # log of exp input gate
+    o = jax.nn.sigmoid(gate("o"))
+    m_new = jnp.maximum(lf + m, li)
+    ip = jnp.exp(li - m_new)
+    fp = jnp.exp(lf + m - m_new)
+    c = fp * c + ip * z
+    n = fp * n + ip
+    hid_new = (o * (c / jnp.maximum(n, 1e-6))).astype(dt_)
+    # pin the carry's batch sharding: GSPMD otherwise replicates the scan
+    # carry and inserts a per-timestep all-gather (3.3e12 B/step observed)
+    cb = lambda x: constrain(x, ("batch", "heads", None))
+    return (cb(c), cb(n), cb(hid_new), cb(m_new)), hid_new
+
+
+def slstm(p, x, cfg, state=None):
+    """x: [B,T,D]; recurrent over T (scan). Returns (out, state')."""
+    dt_ = x.dtype
+    b, t, d = x.shape
+    h, dh = _heads(cfg)
+    u = x @ p["up"].astype(dt_)
+    a, g = u[..., :d], u[..., d:]
+    from repro.sharding.ctx import constrain
+    # NOT seq-sharded: the time scan slices one step per iteration, and a
+    # 'model'-sharded time axis would reshard (all-reduce) at every step —
+    # 98k collectives per train step before this constraint was fixed.
+    pre = {nm: constrain(
+        jnp.einsum("btd,dhk->bthk", a, p[f"w_{nm}"].astype(dt_)),
+        ("batch", None, "heads", None)) for nm in ("z", "i", "f", "o")}
+    if state is None:
+        state = init_slstm_state(cfg, b)
+    st = (state["c"], state["n"], state["h"].astype(dt_), state["m"])
+
+    def step(carry, xs):
+        return _slstm_cell(p, xs, carry, dt_)
+
+    # Two-level scan: rematerialised chunks so the backward pass keeps
+    # chunk-boundary carries only (a flat T-step scan would retain
+    # T x [B,H,dh] x 4 states — 34 GiB/dev at train_4k scale).
+    chunk = 64
+    while t % chunk:
+        chunk -= 1
+    nc = t // chunk
+
+    @jax.checkpoint
+    def chunk_body(carry, xs_c):
+        return jax.lax.scan(step, carry, xs_c)
+
+    xs = {nm: pre[nm].swapaxes(0, 1).reshape(nc, chunk, b, h, dh)
+          for nm in pre}                               # [nc,chunk,B,H,dh]
+    st_f, ys = jax.lax.scan(chunk_body, st, xs)
+    y = ys.reshape(t, b, h, dh).swapaxes(0, 1).reshape(b, t, h * dh)
+    out = (y * jax.nn.silu(g)) @ p["down"].astype(dt_)
+    new_state = {"c": st_f[0], "n": st_f[1],
+                 "h": st_f[2].astype(jnp.float32), "m": st_f[3]}
+    return out, new_state
+
+
+def init_slstm_state(cfg, batch):
+    h, dh = _heads(cfg)
+    z = lambda: jnp.zeros((batch, h, dh), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(), "m": z()}

@@ -1,0 +1,248 @@
+"""Trip-count-aware cost analysis of post-GSPMD HLO text.
+
+``compiled.cost_analysis()`` counts every computation ONCE — a scan over 32
+layer groups contributes 1/32 of its true FLOPs (and a grad-accumulation
+loop another 1/8).  This analyzer walks the call graph instead:
+
+  * while ops carry ``known_trip_count`` in backend_config; a computation's
+    execution count = sum over call sites of caller_count x trips,
+  * dot FLOPs  = 2 x |result| x |contracting dims|, scaled by count,
+  * HBM bytes  = (result + operand bytes) of *top-level* ops (entry, while
+    bodies, conditionals), scaled by count.  Ops inside fusion computations
+    are excluded — the fusion op itself accounts for the HBM traffic, which
+    is exactly the fusion contract,
+  * collective bytes = result bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute, scaled by count
+    (all-reduce counted 2x: RS + AG phases).
+
+All numbers are per device (the module is the SPMD-partitioned one).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_COMP_RE = re.compile(r"^(?:ENTRY )?%?([\w.-]+) \(.*\) -> .* \{\s*$")
+_INSTR_RE = re.compile(
+    r"^\s+(?:ROOT )?%?([\w.-]+) = ((?:\([^)]*\))|(?:[\w]+\[[^\]]*\]"
+    r"(?:\{[^}]*\})?))\s+([\w-]+)\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_RE = re.compile(r"(?:calls|body|to_apply)=%?([\w.-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SKIP_BYTES = {"parameter", "tuple", "get-tuple-element", "constant",
+               "bitcast", "after-all", "opt-barrier", "partition-id"}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+class Instr:
+    __slots__ = ("name", "type_str", "op", "line")
+
+    def __init__(self, name, type_str, op, line):
+        self.name, self.type_str, self.op, self.line = name, type_str, op, line
+
+
+def parse_module(hlo: str):
+    comps: Dict[str, list] = {}
+    cur = None
+    for line in hlo.splitlines():
+        m = _COMP_RE.match(line)
+        if m:
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if cur is None:
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        mi = _INSTR_RE.match(line)
+        if mi:
+            comps[cur].append(Instr(mi.group(1), mi.group(2), mi.group(3),
+                                    line))
+    return comps
+
+
+def analyze_hlo(hlo: str) -> dict:
+    comps = parse_module(hlo)
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_RE.match(line)
+            if m:
+                entry = m.group(1)
+    if entry is None:                                   # fall back: last comp
+        entry = list(comps)[-1]
+
+    # call graph: comp -> [(callee, multiplier, via_fusion)]
+    edges = defaultdict(list)
+    fused = set()
+    for cname, instrs in comps.items():
+        for ins in instrs:
+            if ins.op == "while":
+                trips = 1
+                mt = _TRIP_RE.search(ins.line)
+                if mt:
+                    trips = int(mt.group(1))
+                body = _CALL_RE.search(ins.line)
+                cond = _COND_RE.search(ins.line)
+                if body:
+                    edges[cname].append((body.group(1), trips))
+                if cond:
+                    edges[cname].append((cond.group(1), trips + 1))
+            elif ins.op == "conditional":
+                mb = _BRANCH_RE.search(ins.line)
+                if mb:
+                    for b in mb.group(1).split(","):
+                        edges[cname].append((b.strip().lstrip("%"), 1))
+            elif ins.op in ("fusion", "call", "reduce", "scatter", "sort",
+                            "map", "reduce-window", "select-and-scatter",
+                            "all-reduce", "reduce-scatter", "custom-call"):
+                for callee in _CALL_RE.findall(ins.line):
+                    edges[cname].append((callee, 1))
+                    if ins.op == "fusion":
+                        fused.add(callee)
+
+    # propagate execution counts from ENTRY
+    count: Dict[str, float] = defaultdict(float)
+    count[entry] = 1.0
+    order = [entry]
+    seen = {entry}
+    i = 0
+    while i < len(order):
+        c = order[i]
+        i += 1
+        for callee, mult in edges.get(c, ()):
+            if callee not in comps:
+                continue
+            count[callee] += count[c] * mult
+            if callee not in seen:
+                seen.add(callee)
+                order.append(callee)
+    # NOTE: simple accumulation over a DAG visited in BFS order can under-
+    # count if a callee is reached before all its callers are final; iterate
+    # to a fixed point instead (call graphs are acyclic, so this converges).
+    for _ in range(len(comps)):
+        changed = False
+        new = defaultdict(float)
+        new[entry] = 1.0
+        for c in order:
+            for callee, mult in edges.get(c, ()):
+                if callee in comps:
+                    new[callee] += new.get(c, 0.0) * mult
+        for k in set(new) | set(count):
+            if abs(new.get(k, 0) - count.get(k, 0)) > 0.5:
+                changed = True
+        count = new
+        if not changed:
+            break
+
+    flops = 0.0
+    hbm = 0.0
+    coll = defaultdict(lambda: {"count": 0.0, "bytes": 0.0})
+    coll_tags = defaultdict(float)
+    tag_re = re.compile(r'op_name="([^"]*)"')
+    # XLA *CPU* has no native bf16 dot: it inserts f32 converts of the
+    # operands, and hoists loop-invariant (weight) converts out of scans —
+    # phantom f32 weight copies that do not exist on TPU (native bf16 MXU).
+    # Quantified here so memory reports can be TPU-adjusted.
+    bf16_promo = 0.0
+    # entry-level hoisted dtype-conversion fusions of loop-invariant tensors
+    # (params or casts thereof); >64 MB only so activation casts don't count
+    promo_re = re.compile(
+        r"= (?:f32|bf16)\[[\d,]*\][^=]*fusion\(%[\w.-]+\),"
+        r" kind=kLoop, calls=%wrapped_convert")
+    for cname, instrs in comps.items():
+        mult = count.get(cname, 0.0)
+        if mult == 0.0:
+            continue
+        shapes = {i.name: i.type_str for i in instrs}
+        for ins in instrs:
+            if ins.op == "dot":
+                res = 1
+                for d in _shape_dims(ins.type_str):
+                    res *= d
+                contract = 1
+                mc = _CONTRACT_RE.search(ins.line)
+                ops = re.findall(r"\(([^)]*)\)", ins.line)
+                lhs_name = None
+                if ops:
+                    args = [a.strip().lstrip("%") for a in
+                            ops[0].split(",")]
+                    if args:
+                        lhs_name = args[0]
+                if mc and lhs_name and lhs_name in shapes:
+                    lhs_dims = _shape_dims(shapes[lhs_name])
+                    for d in mc.group(1).split(","):
+                        if d and int(d) < len(lhs_dims):
+                            contract *= lhs_dims[int(d)]
+                flops += mult * 2.0 * res * contract
+            base_op = ins.op.replace("-start", "")
+            if base_op in _COLLECTIVES:
+                b = _shape_bytes(ins.type_str)
+                factor = 2.0 if base_op == "all-reduce" else 1.0
+                coll[base_op]["count"] += mult
+                coll[base_op]["bytes"] += mult * b * factor
+                mtag = tag_re.search(ins.line)
+                if mtag:
+                    # keep a coarse tag: last two path components
+                    parts = mtag.group(1).split("/")
+                    tag = "/".join(parts[-2:])[:80]
+                else:
+                    tag = "untagged"
+                coll_tags[f"{base_op}|{tag}"] += mult * b * factor
+            if (ins.op == "fusion" and cname == entry
+                    and promo_re.search(ins.line)):
+                b = _shape_bytes(ins.type_str)
+                if b > 64 << 20:
+                    bf16_promo += b
+            if cname not in fused and ins.op not in _SKIP_BYTES \
+                    and not ins.op.endswith("-done"):
+                b = _shape_bytes(ins.type_str)
+                ops = re.findall(r"\(([^)]*)\)", ins.line)
+                if ops:
+                    for a in ops[0].split(","):
+                        a = a.strip().lstrip("%")
+                        if a in shapes:
+                            b += _shape_bytes(shapes[a])
+                hbm += mult * b
+
+    top_tags = dict(sorted(coll_tags.items(), key=lambda kv: -kv[1])[:12])
+    return {
+        "flops_per_device": flops,
+        "hbm_bytes_per_device": hbm,
+        "collectives": {k: dict(v) for k, v in coll.items()},
+        "collective_wire_bytes_per_device": sum(
+            v["bytes"] for v in coll.values()),
+        "collective_top_tags": top_tags,
+        "cpu_bf16_promotion_bytes": bf16_promo,
+    }

@@ -1,0 +1,47 @@
+"""Ambient sharding context.
+
+Model code is mesh-agnostic; launchers install a mesh here and layer code
+calls ``constrain(x, logical_axes)`` at memory-critical points (attention
+scores, MoE dispatch buffers, logits chunks, SSM states).  The divisibility-
+aware resolver then maps logical axes onto whatever mesh is active — e.g.
+40 attention heads silently fall back from 'model' to a kv-seq sharding on a
+16-wide model axis.  Outside any context (single-device CPU tests) this is
+an identity.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.sharding import rules as R
+
+_MESH: list = [None]
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    _MESH.append(mesh)
+    try:
+        if mesh is not None:
+            with mesh:
+                yield mesh
+        else:
+            yield None
+    finally:
+        _MESH.pop()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _MESH[-1]
+
+
+def constrain(x, axes):
+    """with_sharding_constraint under the ambient mesh (identity if none)."""
+    mesh = _MESH[-1]
+    if mesh is None:
+        return x
+    spec = R.resolve(axes, x.shape, mesh, R.ACT_RULES)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,156 @@
+"""Logical-axis sharding rules with divisibility-aware resolution.
+
+Every parameter/activation carries a tuple of *logical* axis names; rules map
+logical axes to (ordered) candidate mesh axes.  ``resolve`` turns an axes
+tuple + concrete shape into a PartitionSpec, dropping candidates that do not
+divide the dimension or that are already used by another dimension of the
+same tensor — so one rule set serves every architecture (8 kv heads vs 36,
+batch 256 vs 1) without per-arch special cases.
+
+Parallelism map (DESIGN.md section 4):
+  * batch           -> ('pod', 'data')   data parallel across pods and hosts
+  * embed (weights) -> 'data'            FSDP: parameters+optimizer sharded
+  * mlp/heads/vocab/experts -> 'model'   tensor/expert parallel within pod
+  * kv_seq          -> 'model'           context parallel for decode caches
+                                         (kicks in when batch/heads cannot
+                                         absorb the mesh, e.g. long_500k)
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Rules = Dict[str, Tuple[str, ...]]
+
+PARAM_RULES: Rules = {
+    "embed": ("data",),          # FSDP axis
+    "vocab": ("model",),
+    "mlp": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "experts": ("model",),
+    "head_dim": (),
+    "rec_in": ("model",),        # sLSTM recurrent-matrix input dim
+    "layers": (),
+    "pos": (),
+    "state": (),
+    "conv": (),
+}
+
+ACT_RULES: Rules = {
+    "batch": ("pod", "data"),
+    # sequence parallelism for inter-block residuals: the scan-saved
+    # activations shard over 'model'; attention/MLP internally re-gather.
+    "seq": ("model",),
+    "kv_seq": ("model",),
+    "embed": (),
+    "vocab": ("model",),
+    "mlp": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "experts": ("model",),
+    "layers": (),
+    "state": (),
+    "conv": (),
+    "pos": (),
+}
+
+# Logical axes of the decode caches / recurrent states, by leaf name.
+CACHE_AXES = {
+    "k": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+    "v": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+    "ck": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+    "cv": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+    "conv": ("layers", "batch", "conv", "mlp"),
+    "ssm": ("layers", "batch", "mlp", "state"),
+    "C": ("layers", "batch", "heads", "head_dim", "head_dim"),
+    "n": ("layers", "batch", "heads", "head_dim"),
+    "m": ("layers", "batch", "heads"),
+    "c": ("layers", "batch", "heads", "head_dim"),
+    "h": ("layers", "batch", "heads", "head_dim"),
+}
+
+
+def resolve(axes: Sequence[Optional[str]], shape: Sequence[int],
+            mesh: Mesh, rules: Rules) -> P:
+    """Logical axes + shape -> PartitionSpec under `rules` for `mesh`."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used: set = set()
+    out = []
+    for name, dim in zip(axes, shape):
+        assignment: Tuple[str, ...] = ()
+        if name:
+            cands = tuple(a for a in rules.get(name, ())
+                          if a in sizes and a not in used)
+            # longest prefix of candidates whose product divides dim
+            for k in range(len(cands), 0, -1):
+                prod = 1
+                for a in cands[:k]:
+                    prod *= sizes[a]
+                if prod > 1 and dim % prod == 0:
+                    assignment = cands[:k]
+                    break
+        used.update(assignment)
+        if len(assignment) == 0:
+            out.append(None)
+        elif len(assignment) == 1:
+            out.append(assignment[0])
+        else:
+            out.append(assignment)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+SMALL_PARAM_BYTES = 64 << 20   # replicate below this (norms, routers, gates)
+
+
+def param_sharding(axes_tree, shape_tree, mesh: Mesh):
+    """NamedSharding tree for a parameter pytree (FSDP+TP rules).
+
+    Small tensors are replicated: FSDP-sharding an 11 MB router costs an
+    activation all-reduce per use (measured 6.9e11 B/step on the 1T config)
+    while saving almost no memory.
+    """
+    import numpy as np
+
+    def one(a, s):
+        nbytes = int(np.prod(s.shape)) * np.dtype(s.dtype).itemsize
+        if nbytes <= SMALL_PARAM_BYTES:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, resolve(a, s.shape, mesh, PARAM_RULES))
+
+    return jax.tree.map(
+        one, axes_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def batch_sharding(batch_specs, mesh: Mesh):
+    """Shard every batch input over ('pod','data') on dim 0."""
+    def one(s):
+        ax = ("batch",) + (None,) * (len(s.shape) - 1)
+        return NamedSharding(mesh, resolve(ax, s.shape, mesh, ACT_RULES))
+    return jax.tree.map(one, batch_specs)
+
+
+def cache_sharding(cache_tree, mesh: Mesh):
+    """NamedSharding tree for decode caches, keyed by leaf name."""
+    def assign(path, leaf):
+        name = None
+        for entry in reversed(path):
+            if hasattr(entry, "key"):
+                name = entry.key
+                break
+        axes = CACHE_AXES.get(name)
+        if axes is None or len(axes) != len(leaf.shape):
+            axes = ("layers", "batch") + (None,) * (len(leaf.shape) - 2)
+        return NamedSharding(mesh, resolve(axes, leaf.shape, mesh, ACT_RULES))
+    return jax.tree_util.tree_map_with_path(assign, cache_tree)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

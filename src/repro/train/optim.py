@@ -1,0 +1,185 @@
+"""Optimizers (AdamW, Adafactor) and LR schedules (cosine, WSD) from scratch.
+
+Optimizer state inherits the parameter sharding (FSDP) so AdamW's two f32
+moments are ZeRO-sharded; Adafactor keeps factored second moments — the
+reason the 1T-parameter config fits a 512-chip pod pair (DESIGN.md section 4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def wsd_schedule(base_lr: float, warmup: int, total: int,
+                 decay_frac: float = 0.1, floor: float = 0.1):
+    """Warmup-Stable-Decay (MiniCPM): flat plateau, short exponential decay."""
+    decay_start = int(total * (1 - decay_frac))
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        stable = jnp.asarray(base_lr, jnp.float32)
+        t = jnp.clip((step - decay_start) / max(total - decay_start, 1), 0, 1)
+        decay = base_lr * (floor ** t)
+        out = jnp.where(step < warmup, warm,
+                        jnp.where(step < decay_start, stable, decay))
+        return out
+    return lr
+
+
+def make_schedule(name: str, base_lr: float, warmup: int, total: int):
+    if name == "wsd":
+        return wsd_schedule(base_lr, warmup, total)
+    return cosine_schedule(base_lr, warmup, total)
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], Tuple[Any, Any]]
+    # update(grads, opt_state, params, step) -> (new_params, new_state)
+
+
+def _barrier(tree):
+    """optimization_barrier + a scalar token to order leaf updates."""
+    leaves, treedef = jax.tree.flatten(tree)
+    leaves = jax.lax.optimization_barrier(leaves)
+    token = jnp.real(leaves[0]).ravel()[0].astype(jnp.float32) * 0.0
+    return treedef.unflatten(leaves), token
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+
+def adamw(lr_fn, cfg: AdamWConfig = AdamWConfig()) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1 - cfg.b1 ** t
+        bc2 = 1 - cfg.b2 ** t
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m2 = cfg.b1 * m + (1 - cfg.b1) * g
+            v2 = cfg.b2 * v + (1 - cfg.b2) * g * g
+            step_ = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + cfg.eps)
+            wd = cfg.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+            p2 = p.astype(jnp.float32) - lr * (step_ + wd)
+            return p2.astype(p.dtype), m2, v2
+
+        leaves_p, treedef = jax.tree.flatten(params)
+        leaves_g = treedef.flatten_up_to(grads)
+        leaves_m = treedef.flatten_up_to(state["m"])
+        leaves_v = treedef.flatten_up_to(state["v"])
+        outs = [upd(g, m, v, p) for g, m, v, p in
+                zip(leaves_g, leaves_m, leaves_v, leaves_p)]
+        new_params = treedef.unflatten([o[0] for o in outs])
+        new_m = treedef.unflatten([o[1] for o in outs])
+        new_v = treedef.unflatten([o[2] for o in outs])
+        return new_params, {"m": new_m, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr_fn, eps: float = 1e-30, clip_threshold: float = 1.0,
+              min_dim_factored: int = 128) -> Optimizer:
+    """Factored second moments for >=2D params (Shazeer & Stern 2018)."""
+
+    def _factored(p) -> bool:
+        return p.ndim >= 2 and p.shape[-1] >= min_dim_factored \
+            and p.shape[-2] >= min_dim_factored
+
+    def init(params):
+        def one(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"s": jax.tree.map(one, params)}
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+        t = step.astype(jnp.float32) + 1.0
+        beta2 = 1.0 - t ** -0.8
+
+        def one(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if "vr" in s:
+                vr = beta2 * s["vr"] + (1 - beta2) * g2.mean(axis=-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * g2.mean(axis=-2)
+                denom = (vr[..., None] / vr.mean(axis=-1, keepdims=True)[..., None]
+                         ) * vc[..., None, :]
+                u = g * jax.lax.rsqrt(denom + eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                new_s = {"v": v}
+            rms_u = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            p2 = p.astype(jnp.float32) - lr * u
+            return p2.astype(p.dtype), new_s
+
+        _CHUNK_BYTES = 256 << 20
+
+        def one_maybe_chunked(g, s, p):
+            # Stacked-layer leaves (e.g. the 1T config's [61, ...] expert
+            # weights, 5 GiB f32 transients each) update one layer slice at
+            # a time under lax.scan, bounding the f32 working set.
+            # (update rms clipping becomes per-slice; documented deviation.)
+            if p.ndim >= 3 and p.size * 4 > _CHUNK_BYTES and p.shape[0] > 1:
+                def body(_, gsp):
+                    out = one(*gsp)
+                    return 0, out
+                _, (p2, new_s) = jax.lax.scan(body, 0, (g, s, p))
+                return p2, new_s
+            return one(g, s, p)
+
+        leaves_p, treedef = jax.tree.flatten(params)
+        leaves_g = treedef.flatten_up_to(grads)
+        leaves_s = treedef.flatten_up_to(state["s"])
+        outs = [one_maybe_chunked(g, s, p)
+                for g, s, p in zip(leaves_g, leaves_s, leaves_p)]
+        new_params = treedef.unflatten([o[0] for o in outs])
+        new_s = treedef.unflatten([o[1] for o in outs])
+        return new_params, {"s": new_s}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, lr_fn) -> Optimizer:
+    if name == "adafactor":
+        return adafactor(lr_fn)
+    return adamw(lr_fn)

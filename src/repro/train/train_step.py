@@ -1,0 +1,108 @@
+"""Train step: loss -> grads -> clip -> (optional int8 EF compression) -> update.
+
+Built once per (model, optimizer) pair; pjit-ready — all sharding comes from
+in_shardings/out_shardings resolved by ``sharding.rules``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime import compression as C
+from repro.train import optim as O
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray              # int32 scalar
+    err: Optional[Any] = None      # int8-compression error feedback
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHparams:
+    base_lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10000
+    grad_clip: float = 1.0
+    compress_grads: bool = False
+    microbatches: int = 1       # gradient accumulation (activation memory /N)
+
+
+def init_train_state(model, params, hp: TrainHparams):
+    lr = O.make_schedule(model.cfg.lr_schedule, hp.base_lr, hp.warmup,
+                         hp.total_steps)
+    opt = O.make_optimizer(model.cfg.optimizer, lr)
+    err = C.init_error(params) if hp.compress_grads else None
+    return TrainState(params, opt.init(params), jnp.zeros((), jnp.int32),
+                      err), opt
+
+
+_CLIP_CHUNK_BYTES = 256 << 20
+
+
+def _sq_sum(g):
+    """sum(g^2) in f32 without materialising an f32 copy of huge leaves
+    (the naive cast+square held 8 x 5 GiB f32 buffers on the 1T config)."""
+    if g.ndim >= 3 and g.size * 4 > _CLIP_CHUNK_BYTES and g.shape[0] > 1:
+        def body(acc, sl):
+            return acc + jnp.sum(jnp.square(sl.astype(jnp.float32))), None
+        acc, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), g)
+        return acc
+    return jnp.sum(jnp.square(g.astype(jnp.float32)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = jnp.sqrt(sum(_sq_sum(g) for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    # scale in the gradient's own dtype: no f32 round-trip buffers
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def _accumulated_grads(model, params, batch, n_micro: int):
+    """lax.scan over microbatches; grads accumulate in the param dtype so the
+    buffer never exceeds one param copy (bf16 for the 1T config)."""
+    def slice_mb(x):
+        b = x.shape[0]
+        assert b % n_micro == 0, (b, n_micro)
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+    mbatches = jax.tree.map(slice_mb, batch)
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params)
+
+    def body(carry, mb):
+        g_acc, loss_acc = carry
+        (loss, mets), grads = jax.value_and_grad(
+            model.loss_fn, has_aux=True)(params, mb)
+        g_acc = jax.tree.map(lambda a, g: a + g.astype(a.dtype),
+                             g_acc, grads)
+        return (g_acc, loss_acc + loss), mets
+
+    (g_acc, loss_sum), mets = jax.lax.scan(
+        body, (g0, jnp.zeros((), jnp.float32)), mbatches)
+    grads = jax.tree.map(lambda g: g / n_micro, g_acc)
+    mets = jax.tree.map(lambda m: m[-1], mets)
+    return loss_sum / n_micro, mets, grads
+
+
+def make_train_step(model, opt, hp: TrainHparams):
+    def train_step(state: TrainState, batch):
+        if hp.microbatches > 1:
+            loss, mets, grads = _accumulated_grads(
+                model, state.params, batch, hp.microbatches)
+        else:
+            (loss, mets), grads = jax.value_and_grad(
+                model.loss_fn, has_aux=True)(state.params, batch)
+        grads, gnorm = clip_by_global_norm(grads, hp.grad_clip)
+        err = state.err
+        if hp.compress_grads:
+            grads, err = C.compress_grads(grads, err)
+        params, opt_state = opt.update(grads, state.opt_state, state.params,
+                                       state.step)
+        mets = dict(mets, loss=loss, grad_norm=gnorm,
+                    step=state.step.astype(jnp.float32))
+        return TrainState(params, opt_state, state.step + 1, err), mets
+    return train_step

@@ -1,0 +1,27 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 CPU device;
+multi-device behaviour is tested via subprocesses (test_distributed.py)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import SimConfig, build_connectome
+
+
+@pytest.fixture(scope="session")
+def small_connectome():
+    return build_connectome(n_scaling=0.02, k_scaling=0.02, seed=7)
+
+
+@pytest.fixture(scope="session")
+def medium_connectome():
+    return build_connectome(n_scaling=0.05, k_scaling=0.05, seed=42)
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def key():
+    return jax.random.PRNGKey(0)

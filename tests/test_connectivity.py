@@ -1,0 +1,86 @@
+"""Connectome construction: statistics, invariants, sharded layout."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import params as P
+from repro.core.connectivity import build_connectome, dense_delay_binned
+from repro.core.distributed import localize_ell
+
+
+def test_synapse_numbers_full_scale_total():
+    """Full-scale synapse count ~3e8 (the paper: 'about 300 million')."""
+    n_full = np.array([P.N_FULL[p] for p in P.POPULATIONS])
+    k = P.synapse_numbers(n_full, P.CONN_PROBS, n_full, 1.0)
+    assert 2.8e8 < k.sum() < 3.1e8
+
+
+def test_indegree_preserved_under_n_scaling():
+    n_full = np.array([P.N_FULL[p] for p in P.POPULATIONS])
+    k_full = P.synapse_numbers(n_full, P.CONN_PROBS, n_full, 1.0)
+    n_small = P.scaled_counts(0.1)
+    k_small = P.synapse_numbers(n_full, P.CONN_PROBS, n_small, 1.0)
+    ind_full = k_full / n_full[:, None]
+    ind_small = k_small / n_small[:, None]
+    np.testing.assert_allclose(ind_small, ind_full, rtol=0.02, atol=0.5)
+
+
+def test_dale_law_and_weight_stats(small_connectome):
+    c = small_connectome
+    n = c.n_total
+    valid = c.targets < n
+    w = c.weights
+    # rows [0, n_exc): excitatory sources -> non-negative weights
+    assert (w[:c.n_exc][valid[:c.n_exc]] >= 0).all()
+    assert (w[c.n_exc:][valid[c.n_exc:]] <= 0).all()
+    w_e = P.psc_from_psp(0.15, __import__(
+        "repro.core.params", fromlist=["NeuronParams"]).NeuronParams())
+    exc_w = w[:c.n_exc][valid[:c.n_exc]] / (1 / np.sqrt(0.02))
+    # mean weight ~ w_e (mix of 1x and 2x for L4E->L23E)
+    assert 0.9 * w_e < exc_w.mean() < 1.35 * w_e
+
+
+def test_delays_on_grid_and_in_range(small_connectome):
+    c = small_connectome
+    valid = c.targets < c.n_total
+    d = c.dbins[valid]
+    assert d.min() >= 1
+    assert d.max() < c.d_max_bins
+
+
+def test_dense_equals_ell_totals(small_connectome):
+    c = small_connectome
+    W = dense_delay_binned(c)
+    valid = c.targets < c.n_total
+    np.testing.assert_allclose(W.sum(), c.weights[valid].sum(), rtol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(n_dev=st.sampled_from([2, 4, 8]), seed=st.integers(0, 3))
+def test_localize_ell_preserves_connectome(n_dev, seed):
+    c = build_connectome(n_scaling=0.01, k_scaling=0.01, seed=seed)
+    tabs, meta = localize_ell(c, n_dev)
+    n_loc = meta["n_loc"]
+    T = np.asarray(tabs.targets).reshape(meta["n_pad"] + 1, n_dev,
+                                         meta["k_loc"])
+    W = np.asarray(tabs.weights).reshape(T.shape)
+    valid = T < n_loc
+    # synapse count and total weight preserved
+    orig_valid = c.targets < c.n_total
+    assert valid.sum() == orig_valid.sum() == c.n_synapses
+    np.testing.assert_allclose(W[valid].sum(), c.weights[orig_valid].sum(),
+                               rtol=1e-5)
+    # localized target ids reconstruct the global ones
+    dev_idx = np.broadcast_to(np.arange(n_dev)[None, :, None], T.shape)
+    glob = dev_idx * n_loc + T
+    np.testing.assert_array_equal(
+        np.sort(glob[valid]), np.sort(c.targets[orig_valid]))
+
+
+def test_dc_compensation_zero_at_full_scale():
+    c = build_connectome(n_scaling=0.01, k_scaling=1.0, seed=0)
+    assert np.allclose(c.i_dc, 0.0)
+
+
+def test_dc_compensation_positive_when_downscaled(small_connectome):
+    assert (small_connectome.i_dc > 0).all()

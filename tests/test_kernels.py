@@ -1,0 +1,107 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.neuron import NeuronParams, NeuronState, Propagators
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------- lif_update
+@pytest.mark.parametrize("n", [1, 100, 1024, 4096, 5003])
+def test_lif_update_matches_ref(n):
+    prop = Propagators.make(NeuronParams(), 0.1)
+    ks = jax.random.split(jax.random.PRNGKey(n), 6)
+    st_ = NeuronState(
+        V=jax.random.uniform(ks[0], (n,), minval=-75.0, maxval=-49.0),
+        I_ex=jax.random.uniform(ks[1], (n,)) * 200,
+        I_in=-jax.random.uniform(ks[2], (n,)) * 200,
+        refrac=jax.random.randint(ks[3], (n,), 0, 4))
+    in_ex = jax.random.uniform(ks[4], (n,)) * 50
+    in_in = -jax.random.uniform(ks[5], (n,)) * 50
+    idc = jnp.full((n,), 5.0)
+    s1, sp1 = ops.lif_update(st_, prop, in_ex, in_in, idc)
+    s2, sp2 = ref.lif_update_ref(st_, prop, in_ex, in_in, idc)
+    for a, b in zip(s1, s2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(sp1), np.asarray(sp2))
+
+
+@settings(max_examples=10, deadline=None)
+@given(dt=st.sampled_from([0.05, 0.1, 0.25]), n=st.integers(1, 300))
+def test_lif_update_property(dt, n):
+    prop = Propagators.make(NeuronParams(), dt)
+    st_ = NeuronState(V=jnp.full((n,), -60.0), I_ex=jnp.full((n,), 10.0),
+                      I_in=jnp.zeros(n), refrac=jnp.zeros(n, jnp.int32))
+    z = jnp.zeros(n)
+    s1, _ = ops.lif_update(st_, prop, z, z, z)
+    s2, _ = ref.lif_update_ref(st_, prop, z, z, z)
+    np.testing.assert_allclose(np.asarray(s1.V), np.asarray(s2.V), rtol=1e-6)
+
+
+# ---------------------------------------------------------- gated matvec
+@pytest.mark.parametrize("shape", [(1, 64, 64), (3, 500, 700), (5, 1024, 513),
+                                   (2, 2000, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gated_spike_matvec(shape, dtype):
+    d, p_, n = shape
+    W = jax.random.normal(jax.random.PRNGKey(0), shape).astype(dtype)
+    s = (jax.random.uniform(jax.random.PRNGKey(1), (p_,)) < 0.02)
+    s = s.astype(jnp.float32)
+    out = ops.gated_spike_matvec(s, W)
+    want = ref.gated_spike_matvec_ref(s, W)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+def test_gated_spike_matvec_empty_and_dense_extremes():
+    W = jax.random.normal(jax.random.PRNGKey(2), (2, 512, 256))
+    zero = jnp.zeros(512)
+    np.testing.assert_allclose(np.asarray(ops.gated_spike_matvec(zero, W)),
+                               0.0)
+    ones = jnp.ones(512)
+    np.testing.assert_allclose(
+        np.asarray(ops.gated_spike_matvec(ones, W)),
+        np.asarray(ref.gated_spike_matvec_ref(ones, W)), rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------------- flash attn
+@pytest.mark.parametrize("cfg", [
+    # (B, Hq, Hkv, T, S, D, causal)
+    (1, 2, 2, 64, 64, 32, True),
+    (2, 4, 2, 128, 128, 64, True),
+    (1, 8, 1, 100, 100, 64, True),       # ragged T
+    (2, 4, 4, 128, 256, 32, False),      # cross-shaped
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(cfg, dtype):
+    b, hq, hkv, t, s, d, causal = cfg
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (b, hq, t, d)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, hkv, s, d)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, hkv, s, d)).astype(dtype)
+    out = ops.flash_attention(q, k, v, causal=causal)
+    want = ref.mha_ref(q, k, v, causal=causal)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_matches_layer_mha():
+    """The XLA-path mha (layers.py) agrees with the Pallas kernel."""
+    from repro.models.layers import mha
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    b, h, kv, t, d = 2, 4, 2, 96, 32
+    q = jax.random.normal(ks[0], (b, t, h, d))
+    k = jax.random.normal(ks[1], (b, t, kv, d))
+    v = jax.random.normal(ks[2], (b, t, kv, d))
+    got = mha(q, k, v, causal=True)                       # [B,T,H,D]
+    want = ops.flash_attention(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                               v.swapaxes(1, 2), causal=True).swapaxes(1, 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

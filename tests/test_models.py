@@ -1,0 +1,173 @@
+"""Per-arch smoke tests + decode/teacher-forcing consistency + MoE props."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models.model import build
+
+
+def make_batch(cfg, key, B=2, T=16, with_labels=True):
+    t = T + 1 if with_labels else T
+    batch = {"tokens": jax.random.randint(key, (B, t), 0, cfg.vocab_size)}
+    if cfg.family == "encdec":
+        batch["enc_inputs"] = jax.random.normal(
+            key, (B, cfg.encoder_seq, cfg.d_model)).astype(
+                cfg.activation_dtype)
+    if cfg.family == "vlm":
+        batch["img_embeds"] = jax.random.normal(
+            key, (B, cfg.n_img_tokens, cfg.d_model)).astype(
+                cfg.activation_dtype)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_forward_and_train_step(arch, key):
+    """Reduced config: one forward + one train step, shapes + no NaNs."""
+    from repro.train.train_step import TrainHparams, init_train_state, \
+        make_train_step
+    cfg = get_smoke_config(arch)
+    m = build(cfg)
+    p = m.init(key)
+    batch = make_batch(cfg, key)
+    loss, mets = jax.jit(m.loss_fn)(p, batch)
+    assert np.isfinite(float(loss))
+    logits = m.forward_logits(p, batch)
+    assert logits.shape == (2, 17, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+    state, opt = init_train_state(m, p, TrainHparams(total_steps=4,
+                                                     warmup=1))
+    step = jax.jit(make_train_step(m, opt, TrainHparams(total_steps=4,
+                                                        warmup=1)))
+    state2, mets2 = step(state, batch)
+    state2, mets2 = step(state2, batch)   # step 0 has lr=0 (warmup)
+    assert int(state2.step) == 2
+    assert np.isfinite(float(mets2["loss"]))
+    # params actually changed
+    d0 = jax.tree.leaves(state.params)[0]
+    d1 = jax.tree.leaves(state2.params)[0]
+    assert not np.allclose(np.asarray(d0), np.asarray(d1))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_metadata(arch):
+    """Full configs expose the exact assigned hyper-parameters."""
+    cfg = get_config(arch)
+    m = build(cfg)
+    n = m.param_count()
+    assert n > 0
+    # spot-check the assignment table
+    expect = {
+        "phi3-medium-14b": (40, 5120, 40, 10, 17920, 100352),
+        "minitron-4b": (32, 3072, 24, 8, 9216, 256000),
+        "minicpm-2b": (40, 2304, 36, 36, 5760, 122753),
+        "qwen3-32b": (64, 5120, 64, 8, 25600, 151936),
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+        "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),
+        "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+        "llama-3.2-vision-90b": (100, 8192, 64, 8, 28672, 128256),
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expect
+
+
+def _pad_cache_seq(caches, extra):
+    """Pad attention-cache seq axes so decode can append past prefill len."""
+    def pad(path, leaf):
+        name = None
+        for e in reversed(path):
+            if hasattr(e, "key"):
+                name = e.key
+                break
+        if name in ("k", "v") and leaf.ndim == 5:    # [G,B,S,KV,hd]
+            return jnp.pad(leaf, ((0, 0), (0, 0), (0, extra), (0, 0),
+                                  (0, 0)))
+        return leaf
+    return jax.tree_util.tree_map_with_path(pad, caches)
+
+
+@pytest.mark.parametrize("arch", ["minitron-4b", "qwen3-32b",
+                                  "jamba-v0.1-52b", "xlstm-1.3b",
+                                  "deepseek-moe-16b"])
+def test_decode_consistent_with_teacher_forcing(arch, key):
+    """prefill+decode logits == full-forward logits at the same position."""
+    import dataclasses
+    # capacity must be loose: drops depend on sequence length, which differs
+    # between the T+1 teacher-forcing pass and the T prefill pass
+    cfg = dataclasses.replace(get_smoke_config(arch), capacity_factor=8.0)
+    m = build(cfg)
+    p = m.init(key)
+    B, T = 2, 16
+    batch = make_batch(cfg, key, B=B, T=T)
+    full = np.asarray(m.forward_logits(p, batch))       # [B, T+1, V]
+
+    pre = dict(batch)
+    pre["tokens"] = batch["tokens"][:, :T]
+    last_logits, caches = m.prefill(p, pre)
+    np.testing.assert_allclose(np.asarray(last_logits), full[:, T - 1],
+                               rtol=2e-3, atol=2e-3)
+
+    caches = _pad_cache_seq(caches, 4)
+    dec_logits, _ = m.decode(p, caches, batch["tokens"][:, T:T + 1],
+                             jnp.int32(T))
+    np.testing.assert_allclose(np.asarray(dec_logits), full[:, T],
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ["minitron-4b", "xlstm-1.3b",
+                                  "jamba-v0.1-52b", "kimi-k2-1t-a32b"])
+def test_chunked_prefill(arch, key):
+    """prefill_chunked == prefill bit-exactly (logits and caches)."""
+    import dataclasses
+    cfg = dataclasses.replace(get_smoke_config(arch), capacity_factor=8.0)
+    m = build(cfg)
+    p = m.init(key)
+    batch = {"tokens": jax.random.randint(key, (2, 16), 0, cfg.vocab_size)}
+    lg_full, c_full = m.prefill(p, batch)
+    lg_chunk, c_chunk = m.prefill_chunked(p, batch, n_chunks=4)
+    np.testing.assert_array_equal(np.asarray(lg_full), np.asarray(lg_chunk))
+
+
+# ------------------------------------------------------------------- MoE
+@settings(max_examples=10, deadline=None)
+@given(e=st.sampled_from([4, 8]), k=st.integers(1, 3),
+       seed=st.integers(0, 5))
+def test_moe_invariants(e, k, seed):
+    import dataclasses
+    from repro.models import moe as M
+    cfg = dataclasses.replace(get_smoke_config("deepseek-moe-16b"),
+                              n_experts=e, top_k=k, n_shared_experts=0)
+    key = jax.random.PRNGKey(seed)
+    p = jax.tree.map(
+        lambda l: l.value if hasattr(l, "value") else l,
+        M.init_moe(key, cfg),
+        is_leaf=lambda l: hasattr(l, "value"))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, 8, cfg.d_model),
+                          jnp.float32).astype(cfg.activation_dtype)
+    out, aux = M.moe(p, x, cfg)
+    assert out.shape == x.shape
+    assert np.isfinite(np.asarray(out, np.float32)).all()
+    # load-balance loss >= 1 (equality at perfect balance), bounded
+    assert 0.9 <= float(aux["lb_loss"]) < e + 1
+    assert 0.0 <= float(aux["dropped_frac"]) <= 1.0
+
+
+def test_moe_zero_when_all_dropped():
+    """capacity_factor -> 0 forces drops; combine must not blow up."""
+    import dataclasses
+    from repro.models import moe as M
+    cfg = dataclasses.replace(get_smoke_config("deepseek-moe-16b"),
+                              capacity_factor=1e-9, n_shared_experts=0)
+    p = jax.tree.map(lambda l: l.value if hasattr(l, "value") else l,
+                     M.init_moe(jax.random.PRNGKey(0), cfg),
+                     is_leaf=lambda l: hasattr(l, "value"))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model),
+                          jnp.float32).astype(cfg.activation_dtype)
+    out, aux = M.moe(p, x, cfg)
+    assert np.isfinite(np.asarray(out, np.float32)).all()
+    assert float(aux["dropped_frac"]) > 0.5

@@ -1,0 +1,107 @@
+"""STDP: pair-protocol causality, bounds, network-level stability."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SimConfig, build_connectome
+from repro.core import plasticity as P
+
+
+def two_neuron_setup():
+    """Minimal hand-built connectome: neuron 0 (exc) -> neuron 1 (exc)."""
+    c = build_connectome(n_scaling=0.01, k_scaling=0.01, seed=0)
+    tables, state = P.build_plastic_tables(c)
+    return c, tables, state
+
+
+def run_protocol(order: str, n_pairs: int = 20, gap_steps: int = 10):
+    """Repeated spike pairing on a real (tiny) connectome; returns the mean
+    change of plastic weights whose pre fired (depress) / post fired
+    (potentiate)."""
+    c, tables, state = two_neuron_setup()
+    cfg = P.STDPConfig(w_ref=float(c.w_ext) / 1.0)
+    n = c.n_total
+    pre = jnp.zeros(n, bool).at[:c.n_exc // 2].set(True)     # half exc fire
+    post = jnp.zeros(n, bool).at[c.n_exc // 2:c.n_exc].set(True)
+    none = jnp.zeros(n, bool)
+    w0 = np.asarray(state.weights).copy()
+
+    step = jax.jit(lambda s, spk: P.stdp_step(s, tables, spk, cfg, 256,
+                                              c.n_exc))
+    for _ in range(n_pairs):
+        first, second = (pre, post) if order == "pre_post" else (post, pre)
+        state = step(state, first)
+        state = step(state, second)
+        for _ in range(gap_steps):
+            state = step(state, none)
+    return c, tables, w0, np.asarray(state.weights)
+
+
+def test_causal_pairing_potentiates():
+    """pre->post ordering: x_pre is fresh when post fires => net LTP on
+    synapses from the pre group to the post group."""
+    c, tables, w0, w1 = run_protocol("pre_post")
+    tgt = np.asarray(tables.out_targets)[:c.n_exc // 2]
+    # synapses pre-group -> post-group
+    sel = (tgt >= c.n_exc // 2) & (tgt < c.n_exc)
+    flat = np.zeros_like(w0, bool)
+    idx = (np.arange(c.n_exc // 2)[:, None] * tgt.shape[1]
+           + np.arange(tgt.shape[1])[None, :])
+    flat[idx[sel]] = True
+    delta = (w1 - w0)[flat]
+    assert delta.size > 10
+    assert delta.mean() > 0, delta.mean()
+
+
+def test_anticausal_pairing_depresses():
+    c, tables, w0, w1 = run_protocol("post_pre")
+    tgt = np.asarray(tables.out_targets)[:c.n_exc // 2]
+    sel = (tgt >= c.n_exc // 2) & (tgt < c.n_exc)
+    flat = np.zeros_like(w0, bool)
+    idx = (np.arange(c.n_exc // 2)[:, None] * tgt.shape[1]
+           + np.arange(tgt.shape[1])[None, :])
+    flat[idx[sel]] = True
+    delta = (w1 - w0)[flat]
+    assert delta.mean() < 0, delta.mean()
+
+
+def test_inhibitory_and_nonplastic_weights_frozen():
+    c, tables, w0, w1 = run_protocol("pre_post")
+    plast = np.asarray(tables.plastic_out).reshape(-1)
+    frozen = ~plast
+    n = frozen.size          # weight array has one extra dump slot
+    np.testing.assert_allclose(w1[:n][frozen], w0[:n][frozen], atol=1e-6)
+
+
+def test_weights_bounded():
+    c, tables, state = two_neuron_setup()
+    cfg = P.STDPConfig(A_plus=1.0, A_minus=0.0,
+                       w_ref=float(c.w_ext))          # aggressive LTP
+    all_exc = jnp.zeros(c.n_total, bool).at[:c.n_exc].set(True)
+    step = jax.jit(lambda s: P.stdp_step(s, tables, all_exc, cfg, 512,
+                                         c.n_exc))
+    for _ in range(50):
+        state = step(state)
+    plast = np.asarray(tables.plastic_out).reshape(-1)
+    w = np.asarray(state.weights)[:plast.size]
+    assert w[plast].max() <= cfg.w_max_factor * cfg.w_ref + 1e-4
+    assert w[plast].min() >= 0.0
+
+
+def test_network_stable_under_stdp():
+    """Full plastic simulation keeps firing and stays finite."""
+    c = build_connectome(n_scaling=0.02, k_scaling=0.02, seed=7)
+    cfg = SimConfig(strategy="event", spike_budget=256)
+    sim, ps, (counts, mean_w) = P.simulate_plastic(
+        c, 200.0, cfg, P.STDPConfig(), key=jax.random.PRNGKey(0))
+    counts = np.asarray(counts)
+    assert int(sim.overflow) == 0
+    assert np.isfinite(np.asarray(ps.weights)).all()
+    assert counts.sum() > 50                      # network stays active
+    mw = np.asarray(mean_w)
+    assert np.isfinite(mw).all()
+    # bounded drift over 0.2 s
+    assert abs(mw[-1] - mw[0]) < 0.2 * abs(mw[0])

@@ -1,0 +1,150 @@
+"""Training substrate: optimizers, schedules, checkpointing, fault tolerance."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpointer as ckpt
+from repro.configs import get_smoke_config
+from repro.models.model import build
+from repro.train import optim as O
+from repro.train.train_step import (TrainHparams, init_train_state,
+                                    make_train_step)
+
+
+def test_wsd_schedule_shape():
+    lr = O.wsd_schedule(1.0, warmup=10, total=100, decay_frac=0.2)
+    assert float(lr(0)) == 0.0
+    assert abs(float(lr(10)) - 1.0) < 1e-6
+    assert abs(float(lr(50)) - 1.0) < 1e-6          # stable plateau
+    assert float(lr(99)) < 0.2                       # decayed
+    assert float(lr(90)) > float(lr(99))             # monotone decay
+
+
+def test_cosine_schedule_shape():
+    lr = O.cosine_schedule(1.0, warmup=10, total=110)
+    assert float(lr(5)) == pytest.approx(0.5)
+    assert float(lr(110)) == pytest.approx(0.0, abs=1e-6)
+
+
+@pytest.mark.parametrize("name", ["adamw", "adafactor"])
+def test_optimizer_reduces_quadratic(name):
+    opt = O.make_optimizer(name, lambda s: 0.1)
+    params = {"w": jnp.array([3.0, -2.0, 1.5])}
+    state = opt.init(params)
+    for step in range(200):
+        grads = {"w": 2 * params["w"]}               # d/dw ||w||^2
+        params, state = opt.update(grads, state, params,
+                                   jnp.asarray(step))
+    assert float(jnp.abs(params["w"]).max()) < 0.3
+
+
+def test_adafactor_state_is_factored():
+    opt = O.make_optimizer("adafactor", lambda s: 1e-3)
+    params = {"big": jnp.zeros((256, 512)), "small": jnp.zeros((8,))}
+    st = opt.init(params)
+    assert set(st["s"]["big"]) == {"vr", "vc"}
+    assert st["s"]["big"]["vr"].shape == (256,)
+    assert st["s"]["big"]["vc"].shape == (512,)
+    assert set(st["s"]["small"]) == {"v"}
+
+
+def test_train_loss_decreases_overfit(key):
+    """A tiny model memorises one repeated batch."""
+    cfg = get_smoke_config("minitron-4b")
+    m = build(cfg)
+    p = m.init(key)
+    hp = TrainHparams(base_lr=3e-3, warmup=2, total_steps=60)
+    state, opt = init_train_state(m, p, hp)
+    step = jax.jit(make_train_step(m, opt, hp))
+    batch = {"tokens": jax.random.randint(key, (4, 17), 0, cfg.vocab_size)}
+    losses = []
+    for _ in range(60):
+        state, mets = step(state, batch)
+        losses.append(float(mets["loss"]))
+    assert losses[-1] < losses[0] * 0.5, (losses[0], losses[-1])
+
+
+def test_checkpoint_roundtrip(tmp_path, key):
+    cfg = get_smoke_config("qwen3-32b")
+    m = build(cfg)
+    p = m.init(key)
+    hp = TrainHparams(total_steps=5)
+    state, opt = init_train_state(m, p, hp)
+    path = ckpt.save(state, str(tmp_path), step=3)
+    assert os.path.exists(path)
+    restored = ckpt.restore(str(tmp_path), state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_gc_keeps_last(tmp_path, key):
+    cfg = get_smoke_config("minitron-4b")
+    m = build(cfg)
+    state, _ = init_train_state(m, m.init(key), TrainHparams())
+    for s in (1, 2, 3, 4):
+        ckpt.save(state, str(tmp_path), step=s, keep=2)
+    assert ckpt.latest_step(str(tmp_path)) == 4
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(steps) == 2
+
+
+def test_restore_reshards_onto_new_sharding(tmp_path, key):
+    """Elastic restart: restore with explicit (here trivial) shardings."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.sharding import rules as R
+    cfg = get_smoke_config("minitron-4b")
+    m = build(cfg)
+    p = m.init(key)
+    ckpt.save(p, str(tmp_path), step=1)
+    mesh = make_host_mesh()
+    sh = R.param_sharding(m.logical_axes(), m.abstract_params(), mesh)
+    restored = ckpt.restore(str(tmp_path), p, shardings=sh)
+    for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_failure_injection_and_restart(tmp_path):
+    """End-to-end: a failure mid-run restarts from checkpoint and finishes,
+    and the final loss trajectory matches an uninterrupted run."""
+    from repro.launch.train import train
+    final, mets = train("minitron-4b", 10, smoke=True, batch=2, seq=16,
+                        ckpt_dir=str(tmp_path), ckpt_every=3,
+                        inject_failures=[5])
+    assert final == 10
+    # steps 3..4 re-run after restore from step 3: the deterministic data
+    # pipeline makes the re-run identical
+    steps = [m["step"] for m in mets]
+    assert steps.count(3.0) == 2                     # replayed once
+    losses = {}
+    for m_ in mets:
+        losses.setdefault(m_["step"], []).append(m_["loss"])
+    for s, vals in losses.items():
+        assert max(vals) - min(vals) < 1e-5, (s, vals)
+
+
+def test_grad_compression_error_feedback():
+    from repro.runtime import compression as C
+    g = {"w": jnp.array([1.0, -0.5, 1e-6, 0.25])}
+    err = C.init_error(g)
+    total = jnp.zeros(4)
+    for _ in range(50):
+        deq, err = C.compress_grads(g, err)
+        total = total + deq["w"]
+    # error feedback: the long-run average converges to the true gradient
+    np.testing.assert_allclose(np.asarray(total) / 50, np.asarray(g["w"]),
+                               atol=2e-3)
+
+
+def test_train_step_with_compression_runs(key):
+    cfg = get_smoke_config("minitron-4b")
+    m = build(cfg)
+    hp = TrainHparams(total_steps=3, compress_grads=True)
+    state, opt = init_train_state(m, m.init(key), hp)
+    step = jax.jit(make_train_step(m, opt, hp))
+    batch = {"tokens": jax.random.randint(key, (2, 17), 0, cfg.vocab_size)}
+    state, mets = step(state, batch)
+    assert np.isfinite(float(mets["loss"]))
+    assert state.err is not None
