@@ -1,30 +1,17 @@
-"""Shared benchmark helpers."""
+"""Shared benchmark helpers (driven through the ``Simulator`` session API)."""
 from __future__ import annotations
 
-import time
 
-import jax
-import numpy as np
+def time_sim(sim, t_model_ms: float, presim_ms: float = 0.0):
+    """Measure a run of ``t_model_ms`` with compilation excluded.
 
-
-def time_sim(c, t_model_ms: float, cfg, key=None, warmup_ms: float = 10.0):
-    """Run the simulation twice (warmup compiles), time the second.
-
-    Returns (wall_s, rtf). RTF = T_wall / T_model (paper's measure).
+    ``sim.warmup`` compiles (and discards) a run of the exact length, the
+    session is re-initialised, and the timed run's ``RunResult`` carries
+    wall clock and RTF = T_wall / T_model (the paper's measure).
     """
-    from repro.core import simulate
-    from repro.core.engine import init_state, prepare_network
-    net = prepare_network(c, cfg)
-    state = init_state(c, key)
-    # warmup: jit compile
-    f, _, _ = simulate(c, warmup_ms, cfg, key=key, net=net, state=state)
-    jax.block_until_ready(f)
-    state = init_state(c, key)
-    t0 = time.perf_counter()
-    f, rec, _ = simulate(c, t_model_ms, cfg, key=key, net=net, state=state)
-    jax.block_until_ready(rec)
-    wall = time.perf_counter() - t0
-    return wall, wall / (t_model_ms * 1e-3), np.asarray(rec)
+    sim.warmup(t_model_ms)
+    sim.reset()
+    return sim.run(t_model_ms, presim_ms=presim_ms)
 
 
 def fmt_row(name: str, us: float, derived: str) -> str:

@@ -7,11 +7,9 @@ since interpret mode has no bandwidth model).
 """
 from __future__ import annotations
 
-import jax
-import numpy as np
-
 from benchmarks.common import fmt_row, time_sim
-from repro.core import SimConfig, build_connectome
+from repro.api import Simulator
+from repro.configs.microcircuit import MicrocircuitConfig
 
 
 def gated_skip_fraction(c, rec) -> float:
@@ -23,18 +21,16 @@ def gated_skip_fraction(c, rec) -> float:
 
 def main():
     scale = 0.02
-    c = build_connectome(n_scaling=scale, k_scaling=scale, seed=4)
-    key = jax.random.PRNGKey(0)
     rows = []
-    rec = None
-    for name, cfg in [
-        ("event", SimConfig(strategy="event", spike_budget=256,
-                            record="pop_counts")),
-        ("dense", SimConfig(strategy="dense", record="pop_counts")),
-    ]:
-        wall, rtf, rec = time_sim(c, 200.0, cfg, key=key)
-        rows.append(fmt_row(f"delivery/{name}", wall * 1e6 / 2000,
-                            f"rtf={rtf:.2f}"))
+    rec = c = None
+    for strategy in ("event", "dense"):
+        sim = Simulator(MicrocircuitConfig(
+            n_scaling=scale, k_scaling=scale, seed=4, strategy=strategy,
+            spike_budget=256, t_presim=0.0), connectome=c)
+        res = time_sim(sim, 200.0)
+        rec, c = res["pop_counts"], sim.connectome
+        rows.append(fmt_row(f"delivery/{strategy}", res.wall_s * 1e6 / 2000,
+                            f"rtf={res.rtf:.2f}"))
     skip = gated_skip_fraction(c, rec)
     # full-scale analytic: natural activity ~31 spikes/step over 77k sources
     p_full = 1 - (1 - 31 / 77169) ** 512

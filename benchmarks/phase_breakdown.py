@@ -1,27 +1,28 @@
 """Fig. 1b (bottom) analogue: wall-clock fraction per simulation phase.
 
 The paper instruments update / deliver / communicate with NEST's timers;
-``PhaseRunner`` reproduces that instrumentation (each phase a separately
-jitted, synchronised call).  Communicate is a no-op on one device — the
-dry-run's collective term covers it for the sharded engine.
+the ``instrumented`` Simulator backend reproduces that instrumentation
+(each phase a separately jitted, synchronised call).  Communicate is a
+no-op on one device — the dry-run's collective term covers it for the
+sharded engine.
 """
 from __future__ import annotations
 
-import jax
-
 from benchmarks.common import fmt_row
-from repro.core import SimConfig, build_connectome
-from repro.core.engine import PhaseRunner
+from repro.api import Simulator
+from repro.configs.microcircuit import MicrocircuitConfig
 
 
 def run(scale: float = 0.05, steps: int = 2000, strategy: str = "event"):
-    c = build_connectome(n_scaling=scale, k_scaling=scale, seed=2)
-    cfg = SimConfig(strategy=strategy, spike_budget=256)
-    pr = PhaseRunner(c, cfg, key=jax.random.PRNGKey(0))
-    pr.step_timed({})                      # warmup/compile
-    timers = {}
-    for _ in range(steps):
-        pr.step_timed(timers)
+    cfg = MicrocircuitConfig(n_scaling=scale, k_scaling=scale, seed=2,
+                             strategy=strategy, spike_budget=256,
+                             t_presim=0.0)
+    sim = Simulator(cfg, backend="instrumented", probes=())
+    t_ms = steps * cfg.dt
+    sim.warmup(t_ms)                       # compile outside the timers
+    sim.reset()
+    res = sim.run(t_ms)
+    timers = {k: v for k, v in res.timers.items() if k != "record"}
     total = sum(timers.values())
     rows = []
     for phase, t in sorted(timers.items()):

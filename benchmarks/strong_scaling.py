@@ -13,10 +13,9 @@ from __future__ import annotations
 import json
 import os
 
-import jax
-
 from benchmarks.common import fmt_row, time_sim
-from repro.core import SimConfig, build_connectome
+from repro.api import Simulator
+from repro.configs.microcircuit import MicrocircuitConfig
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
 
@@ -27,13 +26,14 @@ STEP_LATENCY_S = {1: 2e-6, 256: 6e-6, 512: 8e-6}   # dispatch + AG latency
 def measured_rows():
     rows = []
     for scale in (0.01, 0.02, 0.05):
-        c = build_connectome(n_scaling=scale, k_scaling=scale, seed=1)
-        cfg = SimConfig(strategy="event", spike_budget=256,
-                        record="pop_counts")
-        wall, rtf, _ = time_sim(c, 1000.0, cfg, key=jax.random.PRNGKey(0))
+        sim = Simulator(MicrocircuitConfig(
+            n_scaling=scale, k_scaling=scale, seed=1, spike_budget=256,
+            t_presim=0.0))
+        res = time_sim(sim, 1000.0)
+        c = sim.connectome
         rows.append(fmt_row(
-            f"strong_scaling/cpu/scale_{scale}", wall * 1e6 / 10000,
-            f"rtf={rtf:.2f};N={c.n_total};syn={c.n_synapses}"))
+            f"strong_scaling/cpu/scale_{scale}", res.wall_s * 1e6 / 10000,
+            f"rtf={res.rtf:.2f};N={c.n_total};syn={c.n_synapses}"))
     return rows
 
 

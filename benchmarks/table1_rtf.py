@@ -13,11 +13,11 @@ from __future__ import annotations
 import json
 import os
 
-import jax
 import numpy as np
 
 from benchmarks.common import fmt_row, time_sim
-from repro.core import SimConfig, build_connectome
+from repro.api import Simulator
+from repro.configs.microcircuit import MicrocircuitConfig
 from repro.core.params import FULL_MEAN_RATES, N_FULL, POPULATIONS
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
@@ -83,12 +83,14 @@ def main():
     for name, rtf, e in LITERATURE:
         rows.append(fmt_row(f"table1/{name.replace(' ', '_')}", rtf * 1e6,
                             f"rtf={rtf};uJ_per_event={e}"))
-    # measured CPU (down-scaled)
-    c = build_connectome(n_scaling=0.05, k_scaling=0.05, seed=3)
-    cfg = SimConfig(strategy="event", spike_budget=256, record="pop_counts")
-    wall, rtf, _ = time_sim(c, 1000.0, cfg, key=jax.random.PRNGKey(0))
-    rows.append(fmt_row("table1/this_work_cpu_5pct_scale", rtf * 1e6,
-                        f"rtf={rtf:.2f};synapses={c.n_synapses}"))
+    # measured CPU (down-scaled), through the unified Simulator session
+    sim = Simulator(MicrocircuitConfig(
+        n_scaling=0.05, k_scaling=0.05, seed=3, spike_budget=256,
+        t_presim=0.0))
+    res = time_sim(sim, 1000.0)
+    rows.append(fmt_row("table1/this_work_cpu_5pct_scale", res.rtf * 1e6,
+                        f"rtf={res.rtf:.2f};"
+                        f"synapses={sim.connectome.n_synapses}"))
     r1 = single_chip_projection()
     rows.append(fmt_row("table1/this_work_v5e_1chip_projected", r1[0] * 1e6,
                         f"rtf={r1[0]:.3f};uJ_per_event={r1[1]:.3f}"))

@@ -1,19 +1,22 @@
 """End-to-end driver for the paper's experiment: simulate the microcircuit
 for a span of biological time and report the realtime factor + activity
 statistics (paper's Fig. 1 protocol: 0.1 s discarded transient, then the
-timed simulation phase).
+timed simulation phase) — driven through the unified ``Simulator`` API.
 
     PYTHONPATH=src python examples/microcircuit_sim.py --scale 0.05 \
         --t-sim 1000 --strategy event
+
+Long runs can be chunked and checkpointed:
+
+    ... --t-sim 60000 --chunk 10000 --checkpoint-dir ckpt
 """
 import argparse
 import time
 
-import jax
 import numpy as np
 
-from repro.core import SimConfig, build_connectome, recording, simulate
-from repro.core.engine import init_state, prepare_network
+from repro.api import Simulator
+from repro.configs.microcircuit import MicrocircuitConfig
 
 
 def main():
@@ -24,43 +27,49 @@ def main():
     ap.add_argument("--t-presim", type=float, default=100.0)
     ap.add_argument("--strategy", default="event",
                     choices=["event", "dense"])
+    ap.add_argument("--backend", default="fused",
+                    choices=["fused", "instrumented", "sharded"])
+    ap.add_argument("--chunk", type=float, default=0.0,
+                    help="chunk size (ms); 0 = single fused run")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="persist the session every chunk")
     ap.add_argument("--use-kernels", action="store_true",
                     help="Pallas kernels (interpret mode on CPU: slow, "
                          "bit-exact)")
+    ap.add_argument("--stdp", action="store_true",
+                    help="compose E->E pair STDP into the loop")
     ap.add_argument("--seed", type=int, default=55)
     args = ap.parse_args()
 
+    cfg = MicrocircuitConfig(
+        n_scaling=args.scale, k_scaling=args.scale, t_sim=args.t_sim,
+        t_presim=args.t_presim, strategy=args.strategy, seed=args.seed)
+
     t0 = time.perf_counter()
-    c = build_connectome(n_scaling=args.scale, k_scaling=args.scale,
-                         seed=args.seed)
+    sim = Simulator(cfg, backend=args.backend, stdp=args.stdp or None,
+                    use_lif_kernel=args.use_kernels,
+                    use_deliver_kernel=args.use_kernels)
+    c = sim.connectome
     print(f"instantiation: {time.perf_counter() - t0:.1f}s "
           f"({c.n_total} neurons, {c.n_synapses:,} synapses)")
 
-    cfg = SimConfig(strategy=args.strategy, spike_budget=512,
-                    record="pop_counts",
-                    use_lif_kernel=args.use_kernels,
-                    use_deliver_kernel=args.use_kernels)
-    key = jax.random.PRNGKey(args.seed)
-    net = prepare_network(c, cfg)
-    state = init_state(c, key)
+    # compile + presim transient happen before the timed phase (paper
+    # protocol); the RunResult's wall clock then covers simulation only
+    warm_ms = args.chunk if args.chunk > 0 else args.t_sim
+    sim.warmup(warm_ms)
 
-    # pre-simulation: discard the startup transient (not timed, as in paper)
-    state, _, _ = simulate(c, args.t_presim, cfg, net=net, state=state)
-    jax.block_until_ready(state)
+    if args.chunk > 0:
+        res = sim.run_chunked(args.t_sim, chunk_ms=args.chunk,
+                              checkpoint_dir=args.checkpoint_dir)
+    else:
+        res = sim.run(args.t_sim)
 
-    t0 = time.perf_counter()
-    state, rec, _ = simulate(c, args.t_sim, cfg, net=net, state=state)
-    jax.block_until_ready(rec)
-    wall = time.perf_counter() - t0
-
-    rtf = wall / (args.t_sim * 1e-3)
-    rec = np.asarray(rec)
-    summ = recording.activity_summary(rec, c, cfg.dt)
-    print(f"T_model={args.t_sim / 1e3:.1f}s  T_wall={wall:.1f}s  "
-          f"RTF={rtf:.2f}  ({'sub' if rtf < 1 else 'super'}-realtime)")
+    summ = res.summary()
+    print(f"T_model={res.t_model_ms / 1e3:.1f}s  T_wall={res.wall_s:.1f}s  "
+          f"RTF={res.rtf:.2f}  ({'sub' if res.rtf < 1 else 'super'}-realtime)")
     print("rates (Hz):", np.round(summ["rates_hz"], 2))
     print("synchrony:", round(summ["synchrony"], 2),
-          " overflow:", int(state.overflow))
+          " overflow:", res.overflow)
 
 
 if __name__ == "__main__":

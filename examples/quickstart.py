@@ -1,29 +1,30 @@
-"""Quickstart: simulate a down-scaled cortical microcircuit in 30 lines.
+"""Quickstart: simulate a down-scaled cortical microcircuit in 20 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax
 import numpy as np
 
-from repro.core import SimConfig, build_connectome, recording, simulate
+from repro.api import Simulator
+from repro.configs.microcircuit import MicrocircuitConfig
 
 # 5 % of the full network (77k neurons / 300M synapses at scale 1.0),
 # with van-Albada DC compensation so firing rates stay realistic.
-c = build_connectome(n_scaling=0.05, k_scaling=0.05, seed=55)
+cfg = MicrocircuitConfig(n_scaling=0.05, k_scaling=0.05, seed=55,
+                         strategy="event",    # NEST-style event delivery
+                         spike_budget=256,    # static per-step spike capacity
+                         t_presim=100.0)      # discarded startup transient
+
+sim = Simulator(cfg, probes=("pop_counts",))
+c = sim.connectome
 print(f"network: {c.n_total} neurons, {c.n_synapses} synapses")
 
-cfg = SimConfig(strategy="event",       # NEST-style event-driven delivery
-                spike_budget=256,        # static per-step spike capacity
-                record="pop_counts")
+res = sim.run(500.0)                          # 0.5 s of model time
 
-final, rec, _ = simulate(c, t_sim_ms=500.0, cfg=cfg,
-                         key=jax.random.PRNGKey(0))
-rec = np.asarray(rec)
-
-summary = recording.activity_summary(rec[1000:], c, cfg.dt)  # skip 100 ms
+summary = res.summary()
+print(f"RTF = {res.rtf:.2f} (wall {res.wall_s:.1f}s incl. compile)")
 print("population rates (Hz):")
 for pop, rate, target in zip(
         ("L23E", "L4E", "L5E", "L6E", "L23I", "L4I", "L5I", "L6I"),
         summary["rates_hz"], summary["target_rates_hz"]):
     print(f"  {pop:5s} {rate:6.2f}  (full-scale reference {target:.2f})")
-print(f"spike-budget overflows: {int(final.overflow)} (must be 0)")
+print(f"spike-budget overflows: {res.overflow} (must be 0)")

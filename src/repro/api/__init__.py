@@ -1,0 +1,25 @@
+"""Unified ``Simulator`` session API over pluggable engine backends.
+
+Entry point for every simulation workload in the repo::
+
+    from repro.api import Simulator
+
+See ``repro.api.simulator`` for the session semantics, ``repro.api.
+backends`` for the engine protocol, and ``repro.api.probes`` for
+recording.
+"""
+from repro.api.backends import (Backend, FusedBackend, InstrumentedBackend,
+                                ShardedBackend, make_backend)
+from repro.api.probes import (Probe, ProbeContext, custom,
+                              mean_plastic_weight, pop_counts, spikes,
+                              total_counts, voltage)
+from repro.api.results import RunResult
+from repro.api.simulator import Simulator
+
+__all__ = [
+    "Simulator", "RunResult",
+    "Backend", "FusedBackend", "InstrumentedBackend", "ShardedBackend",
+    "make_backend",
+    "Probe", "ProbeContext", "custom", "mean_plastic_weight", "pop_counts",
+    "spikes", "total_counts", "voltage",
+]

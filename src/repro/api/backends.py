@@ -1,0 +1,399 @@
+"""Engine backends behind the ``Simulator`` session API.
+
+A backend owns the device-resident network tables and exposes a tiny
+functional protocol::
+
+    build(connectome, sim_config, neuron)   # host-side table construction
+    init(key) -> state                       # fresh dynamical state (pytree)
+    run(state, n_steps, probes) -> (state', {probe_name: [n_steps, ...]})
+
+Three engines from the seed repo are adapted:
+
+* ``fused``        — the production ``lax.scan`` path (``engine.make_step``),
+                     optionally with pair-STDP composed into the loop
+                     (``stdp=`` on the Simulator),
+* ``instrumented`` — each phase a separately jitted call with wall-clock
+                     timers (absorbs the old ``engine.PhaseRunner``),
+* ``sharded``      — NEST's distribution scheme over a device mesh
+                     (``distributed.localize_ell`` + ``make_sharded_step``).
+
+``run`` is pure in the state: callers (the Simulator) thread the returned
+state, which is what makes warmup-compilation, chunked long runs and
+checkpoint/restore uniform across engines.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.probes import Probe, ProbeContext
+from repro.core import delivery as dlv
+from repro.core import distributed as DD
+from repro.core.connectivity import Connectome
+from repro.core.engine import (SimConfig, SimState, deliver_phase, init_state,
+                               make_step, prepare_network, update_phase)
+from repro.core.neuron import NeuronParams, Propagators
+
+
+class Backend:
+    """Protocol base; concrete backends override build/init/run."""
+
+    name: str = "abstract"
+
+    def build(self, c: Connectome, cfg: SimConfig,
+              neuron: Optional[NeuronParams] = None) -> None:
+        raise NotImplementedError
+
+    def init(self, key) -> Any:
+        raise NotImplementedError
+
+    def run(self, state: Any, n_steps: int, probes: Sequence[Probe]
+            ) -> Tuple[Any, Dict[str, jnp.ndarray]]:
+        raise NotImplementedError
+
+    # optional capabilities -------------------------------------------------
+    def supports_probe(self, probe: Probe) -> bool:
+        return True
+
+    def warmup(self, state: Any, n_steps: int,
+               probes: Sequence[Probe]) -> None:
+        """Compile the ``run`` of this length; must not mutate ``state``.
+
+        Default: execute-and-discard (``run`` is pure). Backends with
+        per-step dispatch override with a cheaper single-step compile.
+        """
+        jax.block_until_ready(self.run(state, n_steps, tuple(probes))[0])
+
+    def overflow(self, state: Any) -> int:
+        """Cumulative spike-budget overflow counter of ``state``."""
+        st = state if hasattr(state, "overflow") else state[0]
+        return int(np.asarray(st.overflow).sum())
+
+
+# ---------------------------------------------------------------------------
+# Fused production backend (single scan; optional STDP composition)
+# ---------------------------------------------------------------------------
+
+class FusedBackend(Backend):
+    """The production path: one jitted ``lax.scan`` over the full chunk."""
+
+    name = "fused"
+
+    def __init__(self, stdp=None):
+        # stdp: None | STDPConfig — composes plasticity tables into the scan
+        self.stdp = stdp
+        self._cache: Dict[Any, Any] = {}
+        self._aot: Dict[Any, Any] = {}
+
+    def build(self, c, cfg, neuron=None):
+        self.c, self.cfg = c, cfg
+        self.prop = Propagators.make(neuron or NeuronParams(), cfg.dt)
+        self.net = prepare_network(c, cfg)
+        self.n_pops = len(c.pop_sizes)
+        self._plastic_tables = None
+        if self.stdp is not None:
+            from repro.core import plasticity as PL
+            if cfg.strategy != "event":
+                raise ValueError("stdp requires the event delivery strategy")
+            # down-scaled nets carry boosted weights: scale the STDP
+            # reference (and thus w_max / amplitudes) to match.  Kept
+            # separate from self.stdp so a rebuild doesn't compound it.
+            self._stdp_scaled = dataclasses.replace(
+                self.stdp, w_ref=self.stdp.w_ref * float(c.w_ext) / 87.8)
+            self._plastic_tables, self._plastic_state0 = \
+                PL.build_plastic_tables(c)
+            self._plastic_mask = self._plastic_tables.plastic_out.reshape(-1)
+
+    def init(self, key):
+        sim = init_state(self.c, key, self.cfg.state_dtype)
+        if self.stdp is not None:
+            return (sim, self._plastic_state0)
+        return sim
+
+    def _args(self, state):
+        if self.stdp is not None:
+            return (state, self.net, self._plastic_tables)
+        return (state, self.net)
+
+    def warmup(self, state, n_steps, probes):
+        # AOT lower+compile: no execution, so warming a long scan is cheap
+        key = (n_steps, tuple(probes))
+        if key not in self._aot:
+            fn = self._compiled(*key)
+            self._aot[key] = fn.lower(*self._args(state)).compile()
+
+    def run(self, state, n_steps, probes):
+        probes = tuple(probes)
+        fn = self._aot.get((n_steps, probes)) \
+            or self._compiled(n_steps, probes)
+        state, outs = fn(*self._args(state))
+        return state, dict(zip((p.name for p in probes), outs))
+
+    def _compiled(self, n_steps: int, probes):
+        key = (n_steps, probes)
+        if key in self._cache:
+            return self._cache[key]
+        c, cfg, prop = self.c, self.cfg, self.prop
+        n, n_exc, n_pops = c.n_total, c.n_exc, self.n_pops
+
+        if self.stdp is None:
+            def runner(state, net):
+                def record(st, spiked):
+                    ctx = ProbeContext(st, spiked, net, n_pops)
+                    return tuple(p(ctx) for p in probes)
+                step = make_step(net, prop, cfg, c.w_ext, n, n_exc,
+                                 n_pops, record_fn=record)
+                return jax.lax.scan(step, state, None, length=n_steps)
+        else:
+            from repro.core import plasticity as PL
+            stdp_cfg, budget = self._stdp_scaled, cfg.spike_budget
+            k_out = c.targets.shape[1]
+            mask = self._plastic_mask
+
+            def runner(state, net, tables):
+                def step(carry, _):
+                    sim, ps = carry
+                    sim, spiked = update_phase(sim, net, prop, cfg,
+                                               c.w_ext, n)
+                    live = dlv.EventTables(
+                        targets=tables.out_targets,
+                        weights=PL.plastic_weight_view(ps, n, k_out),
+                        dbins=tables.out_dbins)
+                    ring, ovf = dlv.deliver_event(
+                        sim.ring, live, spiked, sim.t, n_exc, budget)
+                    sim = SimState(sim.neuron, ring, sim.t + 1, sim.key,
+                                   sim.overflow + ovf)
+                    ps = PL.stdp_step(ps, tables, spiked, stdp_cfg,
+                                      budget, n_exc)
+                    ctx = ProbeContext(sim, spiked, net, n_pops,
+                                       plastic=ps, plastic_mask=mask)
+                    return (sim, ps), tuple(p(ctx) for p in probes)
+                return jax.lax.scan(step, state, None, length=n_steps)
+
+        fn = jax.jit(runner)
+        self._cache[key] = fn
+        return fn
+
+
+# ---------------------------------------------------------------------------
+# Instrumented backend (per-phase jits + wall-clock timers)
+# ---------------------------------------------------------------------------
+
+class InstrumentedBackend(Backend):
+    """Each phase separately jitted and synchronised, as the paper's timers.
+
+    Slower than ``fused`` (per-step dispatch) but attributes wall clock to
+    update / deliver (/ record) — the Fig. 1b phase-breakdown measurement.
+    Cumulative per-phase seconds accumulate in ``self.timers``.
+    """
+
+    name = "instrumented"
+
+    def __init__(self):
+        self.timers: Dict[str, float] = {}
+        self._warmed: set = set()
+
+    def build(self, c, cfg, neuron=None):
+        self.c, self.cfg = c, cfg
+        self.prop = Propagators.make(neuron or NeuronParams(), cfg.dt)
+        self.net = prepare_network(c, cfg)
+        self.n_pops = len(c.pop_sizes)
+        self._update = jax.jit(lambda s: update_phase(
+            s, self.net, self.prop, cfg, c.w_ext, c.n_total))
+        self._deliver = jax.jit(lambda s, spk: deliver_phase(
+            s, self.net, cfg, spk, c.n_exc))
+        self._record_cache: Dict[Any, Any] = {}
+
+    def init(self, key):
+        return init_state(self.c, key, self.cfg.state_dtype)
+
+    def step_timed(self, state, timers: Dict[str, float]):
+        """One update+deliver cycle, phases timed separately.
+
+        Returns (state', spiked). Also used by the ``PhaseRunner`` shim.
+        """
+        t0 = time.perf_counter()
+        state, spiked = self._update(state)
+        spiked.block_until_ready()
+        t1 = time.perf_counter()
+        state = self._deliver(state, spiked)
+        jax.block_until_ready(state)
+        t2 = time.perf_counter()
+        timers["update"] = timers.get("update", 0.0) + (t1 - t0)
+        timers["deliver"] = timers.get("deliver", 0.0) + (t2 - t1)
+        return state, spiked
+
+    def _record_fn(self, probes):
+        if probes not in self._record_cache:
+            n_pops, net = self.n_pops, self.net
+
+            def record(state, spiked):
+                ctx = ProbeContext(state, spiked, net, n_pops)
+                return tuple(p(ctx) for p in probes)
+            self._record_cache[probes] = jax.jit(record)
+        return self._record_cache[probes]
+
+    def warmup(self, state, n_steps, probes):
+        # per-step dispatch: compiling the three phase jits once is enough
+        probes = tuple(probes)
+        if probes in self._warmed:
+            return
+        _s, _spk = self._update(state)
+        jax.block_until_ready(self._deliver(_s, _spk))
+        if probes:
+            jax.block_until_ready(self._record_fn(probes)(_s, _spk))
+        self._warmed.add(probes)
+
+    def run(self, state, n_steps, probes):
+        probes = tuple(probes)
+        record = self._record_fn(probes)
+        # warm the compile caches without advancing state (calls are pure)
+        self.warmup(state, n_steps, probes)
+
+        outs = [[] for _ in probes]
+        for _ in range(n_steps):
+            state, spiked = self.step_timed(state, self.timers)
+            if probes:
+                t0 = time.perf_counter()
+                vals = record(state, spiked)
+                jax.block_until_ready(vals)
+                self.timers["record"] = (self.timers.get("record", 0.0)
+                                         + time.perf_counter() - t0)
+                for buf, v in zip(outs, vals):
+                    buf.append(np.asarray(v))
+        data = {p.name: np.stack(buf) for p, buf in zip(probes, outs)}
+        return state, data
+
+
+# ---------------------------------------------------------------------------
+# Sharded backend (NEST's distribution scheme via shard_map)
+# ---------------------------------------------------------------------------
+
+class ShardedBackend(Backend):
+    """Wraps ``distributed.localize_ell`` + ``make_sharded_step``.
+
+    Records population counts through the same ``pop_counts`` probe surface
+    (the all-gathered spike registry is reduced in-scan, replicated across
+    devices). Probe support is restricted to reductions computable from the
+    spike registry: ``pop_counts`` and ``total_counts``.
+    """
+
+    name = "sharded"
+    _SUPPORTED = {"pop_counts", "total_counts"}
+
+    def __init__(self, n_devices: Optional[int] = None):
+        self.n_devices = n_devices
+        self._cache: Dict[int, Any] = {}
+        self._aot: Dict[int, Any] = {}
+
+    def build(self, c, cfg, neuron=None):
+        if cfg.strategy != "event":
+            raise ValueError("sharded backend implements the event (ELL) "
+                             "strategy only")
+        self.c, self.cfg = c, cfg
+        self.prop = Propagators.make(neuron or NeuronParams(), cfg.dt)
+        n_dev = self.n_devices or len(jax.devices())
+        if n_dev > len(jax.devices()):
+            raise ValueError(f"n_devices={n_dev} > available "
+                             f"{len(jax.devices())}")
+        self.n_dev = n_dev
+        from repro.launch.mesh import make_mesh_auto
+        self.mesh = make_mesh_auto((n_dev,), ("flat",))
+        self.tables, self.meta = DD.localize_ell(c, n_dev)
+        self.n_pops = len(c.pop_sizes)
+        # global population index padded with a sentinel population so the
+        # in-scan segment_sum can drop the padding neurons
+        pop_of = np.full(self.meta["n_pad"], self.n_pops, np.int32)
+        pop_of[:c.n_total] = c.pop_of
+        self.pop_of = jnp.asarray(pop_of)
+
+    def supports_probe(self, probe):
+        return probe.name in self._SUPPORTED
+
+    def warmup(self, state, n_steps, probes):
+        if n_steps not in self._aot:
+            fn = self._compiled(n_steps)
+            with self.mesh:
+                self._aot[n_steps] = fn.lower(state, self.tables).compile()
+
+    def init(self, key):
+        c, meta, n_dev = self.c, self.meta, self.n_dev
+        st0 = init_state(c, key)            # the sharded engine is f32-only
+        n_pad = meta["n_pad"]
+        pad = n_pad - c.n_total
+        V = jnp.pad(st0.neuron.V, (0, pad),
+                    constant_values=self.prop.V_reset)
+        if n_dev == 1:
+            keys = st0.key[None]           # bit-identical to the fused path
+        else:
+            keys = jax.vmap(lambda i: jax.random.fold_in(st0.key, i))(
+                jnp.arange(n_dev))
+        return DD.ShardedSimState(
+            V=V,
+            I_ex=jnp.zeros(n_pad), I_in=jnp.zeros(n_pad),
+            refrac=jnp.zeros(n_pad, jnp.int32),
+            ring=jnp.zeros((c.d_max_bins, 2, n_pad + n_dev)),
+            t=jnp.zeros((), jnp.int32),
+            key=keys,
+            overflow=jnp.zeros((n_dev,), jnp.int32))
+
+    def run(self, state, n_steps, probes):
+        probes = tuple(probes)
+        for p in probes:
+            if not self.supports_probe(p):
+                raise NotImplementedError(
+                    f"sharded backend records {sorted(self._SUPPORTED)} "
+                    f"only, got probe {p.name!r}")
+        fn = self._aot.get(n_steps) or self._compiled(n_steps)
+        with self.mesh:
+            state, pop_counts = fn(state, self.tables)
+        data = {}
+        for p in probes:
+            if p.name == "pop_counts":
+                data[p.name] = pop_counts
+            elif p.name == "total_counts":
+                data[p.name] = jnp.sum(pop_counts, axis=1)
+        return state, data
+
+    def _compiled(self, n_steps: int):
+        if n_steps not in self._cache:
+            c, cfg = self.c, self.cfg
+            sim = DD.make_sharded_step(
+                self.mesh, self.meta, self.prop, n_exc=c.n_exc,
+                w_ext=c.w_ext, bg_rate=cfg.bg_rate, dt=cfg.dt,
+                spike_budget=cfg.spike_budget, n_steps=n_steps,
+                pop_of=self.pop_of, n_pops=self.n_pops)
+            self._cache[n_steps] = jax.jit(sim)
+        return self._cache[n_steps]
+
+
+REGISTRY = {
+    "fused": FusedBackend,
+    "instrumented": InstrumentedBackend,
+    "sharded": ShardedBackend,
+}
+
+
+def make_backend(spec, *, stdp=None, n_devices=None) -> Backend:
+    """Resolve a backend name / instance; thread backend-specific options."""
+    if isinstance(spec, Backend):
+        if stdp is not None and getattr(spec, "stdp", None) is None:
+            raise ValueError("pass stdp= to the backend constructor when "
+                             "supplying a backend instance")
+        return spec
+    if spec not in REGISTRY:
+        raise ValueError(f"unknown backend {spec!r}; "
+                         f"available: {sorted(REGISTRY)}")
+    if spec == "fused":
+        return FusedBackend(stdp=stdp)
+    if stdp is not None:
+        raise NotImplementedError(f"stdp= is only composed into the fused "
+                                  f"backend, not {spec!r}")
+    if spec == "sharded":
+        return ShardedBackend(n_devices=n_devices)
+    return REGISTRY[spec]()

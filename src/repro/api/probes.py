@@ -1,0 +1,135 @@
+"""Probe-based recording for the ``Simulator`` session API.
+
+A probe is a named per-step reducer evaluated inside the simulation loop
+(in-scan for the fused backend, per step for the instrumented one).  It
+replaces the old ``SimConfig.record: str`` enum: instead of one global
+recording mode, a run carries any set of probes and the result maps probe
+name -> array with leading axis ``n_steps``.
+
+Built-ins::
+
+    pop_counts()          [T, n_pops] int32 spike counts per population
+    spikes()              [T, N] bool raster (memory-heavy at scale)
+    total_counts()        [T] int32 network-wide spike count
+    voltage(ids=None)     [T, len(ids)] membrane potentials (all N if None)
+    mean_plastic_weight() [T] mean E->E weight (requires stdp=...)
+    custom(name, fn)      any reducer ``fn(ctx) -> array``
+
+``ctx`` is a :class:`ProbeContext` with the post-step state, this step's
+spike vector, the device-resident network tables, and (when STDP is
+composed in) the plastic state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+
+class ProbeContext(NamedTuple):
+    """What a probe may read each step (all traced values)."""
+    state: "SimState"           # post-deliver engine state
+    spiked: jnp.ndarray         # [N] bool, this step's spikes
+    net: "Network"              # device tables (pop_of, k_ext, ...)
+    n_pops: int                 # static population count
+    plastic: Optional["PlasticState"] = None   # STDP runs only
+    plastic_mask: Optional[jnp.ndarray] = None  # [n_syn] bool, E->E synapses
+
+
+@dataclasses.dataclass(frozen=True)
+class Probe:
+    """A named per-step reducer. ``fn(ctx) -> jnp.ndarray`` (static shape)."""
+    name: str
+    fn: Callable[[ProbeContext], jnp.ndarray]
+
+    def __call__(self, ctx: ProbeContext) -> jnp.ndarray:
+        return self.fn(ctx)
+
+
+def pop_counts() -> Probe:
+    """Per-population spike counts — the paper's cheap validation record."""
+    def fn(ctx: ProbeContext) -> jnp.ndarray:
+        return jax.ops.segment_sum(
+            ctx.spiked.astype(jnp.int32), ctx.net.pop_of,
+            num_segments=ctx.n_pops, indices_are_sorted=True)
+    return Probe("pop_counts", fn)
+
+
+def spikes() -> Probe:
+    """Full boolean spike raster (use for small nets / short horizons)."""
+    return Probe("spikes", lambda ctx: ctx.spiked)
+
+
+def total_counts() -> Probe:
+    """Network-wide spike count per step."""
+    return Probe(
+        "total_counts",
+        lambda ctx: jnp.sum(ctx.spiked, dtype=jnp.int32))
+
+
+def voltage(ids: Optional[Sequence[int]] = None) -> Probe:
+    """Membrane-potential traces for ``ids`` (all neurons when None)."""
+    idx = None if ids is None else jnp.asarray(ids, jnp.int32)
+
+    def fn(ctx: ProbeContext) -> jnp.ndarray:
+        V = ctx.state.neuron.V
+        return V if idx is None else V[idx]
+    return Probe("voltage", fn)
+
+
+def mean_plastic_weight() -> Probe:
+    """Mean weight over the plastic (E->E) synapses; needs ``stdp=``."""
+    def fn(ctx: ProbeContext) -> jnp.ndarray:
+        if ctx.plastic is None:
+            raise ValueError(
+                "mean_plastic_weight probe requires an STDP-enabled run "
+                "(pass stdp=... to Simulator)")
+        mask = ctx.plastic_mask
+        n_plastic = jnp.maximum(mask.sum(), 1)
+        w = ctx.plastic.weights[:mask.shape[0]]
+        return jnp.sum(jnp.where(mask, w, 0.0)) / n_plastic
+    return Probe("mean_plastic_weight", fn)
+
+
+def custom(name: str, fn: Callable[[ProbeContext], jnp.ndarray]) -> Probe:
+    """Arbitrary reducer; must return a fixed-shape array each step."""
+    return Probe(name, fn)
+
+
+_BUILTIN = {
+    "pop_counts": pop_counts,
+    "spikes": spikes,
+    "total_counts": total_counts,
+    "voltage": voltage,
+    "mean_plastic_weight": mean_plastic_weight,
+}
+
+ProbeLike = Union[str, Probe]
+
+# name -> interned Probe instance.  Probe equality is identity-based (the
+# reducer fn is a fresh closure per factory call), and backend compile
+# caches are keyed on Probe instances — resolving the same name twice must
+# yield the SAME object or every run would recompile.
+_INTERNED: dict = {}
+
+
+def resolve(probes: Sequence[ProbeLike]) -> tuple:
+    """Normalise a mixed list of names / Probe objects; reject duplicates."""
+    out = []
+    for p in probes:
+        if isinstance(p, str):
+            if p not in _BUILTIN:
+                raise ValueError(
+                    f"unknown probe {p!r}; built-ins: {sorted(_BUILTIN)}")
+            if p not in _INTERNED:
+                _INTERNED[p] = _BUILTIN[p]()
+            p = _INTERNED[p]
+        elif not isinstance(p, Probe):
+            raise TypeError(f"probe must be a name or Probe, got {type(p)}")
+        out.append(p)
+    names = [p.name for p in out]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate probe names: {names}")
+    return tuple(out)

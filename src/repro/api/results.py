@@ -1,0 +1,83 @@
+"""Run results: probe data + wall-clock / realtime-factor accounting.
+
+The paper's headline measure is the realtime factor RTF = T_wall / T_model;
+every ``Simulator.run`` returns it alongside the probe data, so benchmarks
+and examples read timing off the result instead of re-implementing the
+stopwatch-plus-``block_until_ready`` dance.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RunResult:
+    """Outcome of one (possibly chunked) ``Simulator`` run.
+
+    ``data`` maps probe name -> array with leading axis ``n_steps``
+    (host numpy; device arrays are converted lazily via ``np.asarray``).
+    ``wall_s`` covers the timed simulation phase only — the presim
+    transient and compilation warmup are excluded when the caller follows
+    the RTF recipe (``Simulator.warmup`` + presim, then ``run``).
+    """
+    data: Dict[str, np.ndarray]
+    t_model_ms: float
+    n_steps: int
+    dt: float
+    wall_s: float
+    overflow: int = 0
+    timers: Dict[str, float] = dataclasses.field(default_factory=dict)
+    _connectome: Optional[object] = dataclasses.field(
+        default=None, repr=False)
+
+    @property
+    def rtf(self) -> float:
+        """Realtime factor: wall seconds per second of model time (<1 is
+        sub-realtime, the paper's target regime)."""
+        return self.wall_s / (self.t_model_ms * 1e-3)
+
+    def __getitem__(self, name: str) -> np.ndarray:
+        arr = self.data[name]
+        if not isinstance(arr, np.ndarray):
+            arr = np.asarray(arr)
+            self.data[name] = arr
+        return arr
+
+    def summary(self) -> Dict[str, np.ndarray]:
+        """Activity statistics (rates / synchrony) from the pop_counts probe."""
+        from repro.core import recording
+        if "pop_counts" not in self.data:
+            raise KeyError("summary() needs the 'pop_counts' probe")
+        if self._connectome is None:
+            raise ValueError("summary() needs the connectome; use the "
+                             "RunResult returned by Simulator")
+        return recording.activity_summary(
+            self["pop_counts"], self._connectome, self.dt)
+
+
+def concat(results: List[RunResult]) -> RunResult:
+    """Concatenate chunk results along the step axis (``run_chunked``)."""
+    if not results:
+        raise ValueError("no chunks to concatenate")
+    head = results[0]
+    data = {}
+    for name in head.data:
+        data[name] = np.concatenate([np.asarray(r.data[name])
+                                     for r in results], axis=0)
+    timers: Dict[str, float] = {}
+    for r in results:
+        for k, v in r.timers.items():
+            timers[k] = timers.get(k, 0.0) + v
+    return RunResult(
+        data=data,
+        t_model_ms=sum(r.t_model_ms for r in results),
+        n_steps=sum(r.n_steps for r in results),
+        dt=head.dt,
+        wall_s=sum(r.wall_s for r in results),
+        overflow=results[-1].overflow,
+        timers=timers,
+        _connectome=head._connectome,
+    )

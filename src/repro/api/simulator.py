@@ -1,0 +1,250 @@
+"""The unified simulation session API.
+
+One front-end for every engine in the repo — the paper's workloads (and the
+long biological-time runs it motivates) are driven as::
+
+    from repro.api import Simulator
+    from repro.configs.microcircuit import MicrocircuitConfig
+
+    sim = Simulator(MicrocircuitConfig(n_scaling=0.05, k_scaling=0.05))
+    res = sim.run(1000.0)                      # 1 s of model time
+    print(res.rtf, res.summary()["rates_hz"])
+
+    # days of biological time, checkpointed:
+    res = sim.run_chunked(3_600_000.0, chunk_ms=10_000.0,
+                          checkpoint_dir="ckpt", checkpoint_every=10)
+
+The engine behind the session is a pluggable :class:`~repro.api.backends.
+Backend` (``fused`` / ``instrumented`` / ``sharded``), recording goes
+through probes instead of the old ``record: str`` enum, the presim
+transient is handled once per session (the paper's protocol: discard
+0.1 s, then time), and checkpoint/restore round-trips through
+``repro.checkpoint.checkpointer``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.api import probes as probes_mod
+from repro.api import results as results_mod
+from repro.api.backends import Backend, make_backend
+from repro.api.results import RunResult
+from repro.core.connectivity import Connectome, build_connectome
+from repro.core.engine import SimConfig
+from repro.core.neuron import NeuronParams
+
+
+class Simulator:
+    """A simulation session: one network, one engine backend, many runs.
+
+    Parameters
+    ----------
+    config:
+        A model config with ``n_scaling / k_scaling / dt / strategy /
+        spike_budget / seed / t_presim`` fields (e.g.
+        ``repro.configs.microcircuit.MicrocircuitConfig``). Optional when a
+        ``connectome`` is supplied directly.
+    connectome:
+        Pre-built :class:`Connectome` (skips instantiation).
+    backend:
+        ``"fused"`` | ``"instrumented"`` | ``"sharded"`` or a
+        :class:`Backend` instance.
+    probes:
+        Default recording set: probe names or :class:`Probe` objects.
+    stdp:
+        ``True`` or an ``STDPConfig`` — composes pair-STDP into the fused
+        engine loop.
+    sim_config:
+        Explicit :class:`SimConfig`; otherwise derived from ``config`` and
+        ``**overrides`` (e.g. ``use_lif_kernel=True``, ``bg_rate=0.0``).
+    """
+
+    def __init__(self, config=None, *, connectome: Optional[Connectome] = None,
+                 backend="fused", probes: Sequence = ("pop_counts",),
+                 stdp=None, neuron: Optional[NeuronParams] = None,
+                 sim_config: Optional[SimConfig] = None, key=None,
+                 n_devices: Optional[int] = None, **overrides):
+        if config is None and connectome is None:
+            raise ValueError("pass a model config or a pre-built connectome")
+        self.config = config
+        seed = int(getattr(config, "seed", 0))
+        if connectome is None:
+            connectome = build_connectome(
+                n_scaling=config.n_scaling, k_scaling=config.k_scaling,
+                seed=seed, dt=config.dt)
+        self.connectome = connectome
+
+        if sim_config is None:
+            sim_config = SimConfig(
+                dt=getattr(config, "dt", 0.1),
+                strategy=getattr(config, "strategy", "event"),
+                spike_budget=getattr(config, "spike_budget", 512),
+            )
+        if overrides:
+            sim_config = dataclasses.replace(sim_config, **overrides)
+        self.sim_config = sim_config
+        self.t_presim = float(getattr(config, "t_presim", 0.0))
+
+        if stdp is True:
+            from repro.core.plasticity import STDPConfig
+            stdp = STDPConfig(dt=sim_config.dt)
+        self.backend: Backend = make_backend(backend, stdp=stdp,
+                                             n_devices=n_devices)
+        self.backend.build(connectome, sim_config, neuron)
+
+        self.probes = probes_mod.resolve(probes)
+        for p in self.probes:
+            if not self.backend.supports_probe(p):
+                raise NotImplementedError(
+                    f"backend {self.backend.name!r} does not support probe "
+                    f"{p.name!r}")
+
+        self._key = key if key is not None else jax.random.PRNGKey(seed)
+        self.reset()
+
+    # -- session state ------------------------------------------------------
+
+    def reset(self, key=None) -> None:
+        """Fresh dynamical state (new presim transient applies)."""
+        if key is not None:
+            self._key = key
+        self._state = self.backend.init(self._key)
+        self._presim_done = False
+        self._steps_done = 0
+        self._t_model_ms = 0.0
+
+    @property
+    def state(self):
+        """The backend's dynamical state pytree (thread-through, functional)."""
+        return self._state
+
+    @property
+    def timers(self):
+        """Per-phase cumulative seconds (instrumented backend only)."""
+        return getattr(self.backend, "timers", {})
+
+    def _steps(self, t_ms: float) -> int:
+        return int(round(t_ms / self.sim_config.dt))
+
+    # -- warmup / presim ----------------------------------------------------
+
+    def warmup(self, t_ms: float, probes: Optional[Sequence] = None,
+               include_presim: bool = True) -> None:
+        """Compile (and discard) a run of ``t_ms`` so a following ``run``
+        of the same length measures execution only. Pure: session state is
+        untouched."""
+        pr = self.probes if probes is None else probes_mod.resolve(probes)
+        self.backend.warmup(self._state, self._steps(t_ms), pr)
+        if include_presim and self.t_presim > 0 and not self._presim_done:
+            self.backend.warmup(self._state, self._steps(self.t_presim), ())
+
+    def _maybe_presim(self, presim_ms: Optional[float]) -> None:
+        t = self.t_presim if presim_ms is None else float(presim_ms)
+        if self._presim_done or t <= 0:
+            return
+        self._state, _ = self.backend.run(self._state, self._steps(t), ())
+        jax.block_until_ready(self._state)
+        self._presim_done = True
+
+    # -- runs ---------------------------------------------------------------
+
+    def run(self, t_ms: float, *, presim_ms: Optional[float] = None,
+            probes: Optional[Sequence] = None) -> RunResult:
+        """Simulate ``t_ms`` of model time; returns data + RTF accounting.
+
+        The presim transient (``config.t_presim`` unless overridden) runs
+        untimed and unrecorded once per session before the first timed
+        phase, as in the paper's measurement protocol.
+        """
+        pr = self.probes if probes is None else probes_mod.resolve(probes)
+        self._maybe_presim(presim_ms)
+        n_steps = self._steps(t_ms)
+        timers0 = dict(self.timers)
+        t0 = time.perf_counter()
+        self._state, data = self.backend.run(self._state, n_steps, pr)
+        jax.block_until_ready((self._state, data))
+        wall = time.perf_counter() - t0
+        self._steps_done += n_steps
+        self._t_model_ms += n_steps * self.sim_config.dt
+        timers = {k: v - timers0.get(k, 0.0)
+                  for k, v in self.timers.items()}
+        return RunResult(
+            data=dict(data), t_model_ms=n_steps * self.sim_config.dt,
+            n_steps=n_steps, dt=self.sim_config.dt, wall_s=wall,
+            overflow=self.backend.overflow(self._state), timers=timers,
+            _connectome=self.connectome)
+
+    def run_chunked(self, t_ms: float, chunk_ms: float, *,
+                    presim_ms: Optional[float] = None,
+                    probes: Optional[Sequence] = None,
+                    callback: Optional[Callable[[int, RunResult], None]] = None,
+                    checkpoint_dir: Optional[str] = None,
+                    checkpoint_every: int = 1) -> RunResult:
+        """``run`` split into fixed chunks — the days-of-biological-time
+        driver. Bit-identical to a single ``run(t_ms)`` of the same session
+        (state threads through chunk boundaries), but probe data lands on
+        the host after every chunk (bounded device memory), ``callback(i,
+        chunk_result)`` can stream statistics, and ``checkpoint_dir``
+        persists the session every ``checkpoint_every`` chunks."""
+        if chunk_ms <= 0:
+            raise ValueError("chunk_ms must be positive")
+        self._maybe_presim(presim_ms)
+        total = self._steps(t_ms)
+        per_chunk = max(1, self._steps(chunk_ms))
+        chunks = []
+        i = 0
+        done = 0
+        while done < total:
+            n = min(per_chunk, total - done)
+            res = self.run(n * self.sim_config.dt, presim_ms=0,
+                           probes=probes)
+            res.data = {k: np.asarray(v) for k, v in res.data.items()}
+            chunks.append(res)
+            done += n
+            i += 1
+            if callback is not None:
+                callback(i, res)
+            if checkpoint_dir is not None and i % checkpoint_every == 0:
+                self.save(checkpoint_dir)
+        return results_mod.concat(chunks)
+
+    # -- checkpoint / restore ----------------------------------------------
+
+    def _package(self):
+        return {
+            "state": self._state,
+            "presim_done": np.asarray(int(self._presim_done), np.int64),
+            "steps_done": np.asarray(self._steps_done, np.int64),
+            "t_model_ms": np.asarray(self._t_model_ms, np.float64),
+        }
+
+    def save(self, directory: str, keep: int = 3) -> str:
+        """Persist the session (state + counters) for ``restore``."""
+        from repro.checkpoint import checkpointer
+        return checkpointer.save(self._package(), directory,
+                                 step=self._steps_done, keep=keep)
+
+    def restore(self, directory: str, step: Optional[int] = None) -> None:
+        """Resume a saved session: state, presim flag, and step counters.
+
+        The target structure comes from this Simulator, so config/backend
+        must match what was saved (shape mismatches fail loudly)."""
+        from repro.checkpoint import checkpointer
+        pkg = checkpointer.restore(directory, self._package(), step=step)
+        for got, want in zip(jax.tree.leaves(pkg["state"]),
+                             jax.tree.leaves(self._state)):
+            if np.shape(got) != np.shape(want):
+                raise ValueError(
+                    f"checkpoint in {directory} does not match this "
+                    f"session (leaf shape {np.shape(got)} vs "
+                    f"{np.shape(want)}); config/backend must equal the "
+                    f"saving session's")
+        self._state = pkg["state"]
+        self._presim_done = bool(int(pkg["presim_done"]))
+        self._steps_done = int(pkg["steps_done"])
+        self._t_model_ms = float(pkg["t_model_ms"])

@@ -133,10 +133,15 @@ def abstract_state(n_pad: int, n_dev: int, d_ring: int) -> ShardedSimState:
 
 def make_sharded_step(mesh, meta: dict, prop: Propagators, *,
                       n_exc: int, w_ext: float, bg_rate: float, dt: float,
-                      spike_budget: int, n_steps: int):
+                      spike_budget: int, n_steps: int,
+                      pop_of=None, n_pops: int = 8):
     """Returns a shard_map'd ``sim_chunk(state, tables) -> (state, counts)``.
 
     ``counts``: [n_steps, n_dev] spikes per device per step (cheap record).
+    With ``pop_of`` (a [n_pad] global population index, sentinel ``n_pops``
+    for padding neurons), counts become [n_steps, n_pops] per-population
+    spike counts instead — reduced from the all-gathered spike registry, so
+    identical on every device (replicated output).
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
@@ -198,12 +203,21 @@ def make_sharded_step(mesh, meta: dict, prop: Propagators, *,
         overflow = st.overflow + jnp.maximum(n_spk - spike_budget, 0)
         new = ShardedSimState(V, I_ex, I_in, refrac, ring, st.t + 1,
                               key[None], overflow)
-        return new, jnp.sum(spiked, dtype=jnp.int32)[None]
+        if pop_of is not None:
+            # every device holds the full registry -> identical reduction
+            counts = jax.ops.segment_sum(
+                spiked_global.astype(jnp.int32), pop_of,
+                num_segments=n_pops + 1, indices_are_sorted=True)[:n_pops]
+        else:
+            counts = jnp.sum(spiked, dtype=jnp.int32)[None]
+        return new, counts
+
+    counts_spec = P(None, None) if pop_of is not None else P(None, axes)
 
     @functools.partial(
         shard_map, mesh=mesh,
         in_specs=(state_spec, tab_spec),
-        out_specs=(state_spec, P(None, axes)),
+        out_specs=(state_spec, counts_spec),
         check_rep=False)
     def sim_chunk(state, tables):
         return jax.lax.scan(

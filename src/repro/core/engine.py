@@ -13,12 +13,20 @@ Mirrors the phase structure the paper instruments (Fig. 1b):
 ``simulate`` fuses the cycle into one ``lax.scan`` (production mode);
 ``PhaseRunner`` exposes each phase as a separately jitted function so the
 benchmark harness can reproduce the paper's phase-breakdown measurement.
+
+.. deprecated::
+    ``simulate`` and ``PhaseRunner`` are kept as thin shims for existing
+    callers; new code should drive runs through ``repro.api.Simulator``
+    (``backend="fused"`` / ``backend="instrumented"``), which adds probes,
+    chunked long runs, checkpointing, and RTF accounting on top of the
+    same phase functions.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple, Optional
+import warnings
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +47,7 @@ class SimConfig:
     use_lif_kernel: bool = False       # Pallas fused update (interpret on CPU)
     use_deliver_kernel: bool = False   # Pallas gated dense delivery
     bg_rate: float = 8.0               # Hz per external synapse
+    state_dtype: type = jnp.float32    # V / currents / ring precision
 
 
 class Network(NamedTuple):
@@ -84,19 +93,32 @@ def prepare_network(c: Connectome, cfg: SimConfig,
     )
 
 
-def init_state(c: Connectome, key, w_ext_dtype=jnp.float32) -> SimState:
-    """Optimized initial conditions (Rhodes et al. 2019), as in the paper."""
+def init_state(c: Connectome, key, state_dtype=jnp.float32,
+               w_ext_dtype=None) -> SimState:
+    """Optimized initial conditions (Rhodes et al. 2019), as in the paper.
+
+    ``state_dtype`` sets the precision of the dynamical state (V, synaptic
+    currents, ring buffer).  The old name ``w_ext_dtype`` was misleading (it
+    never touched the external weights) and is kept only as a deprecated
+    alias.
+    """
+    if w_ext_dtype is not None:
+        warnings.warn(
+            "init_state(w_ext_dtype=...) is deprecated; the parameter sets "
+            "the state precision — use state_dtype=... (or "
+            "SimConfig.state_dtype)", DeprecationWarning, stacklevel=2)
+        state_dtype = w_ext_dtype
     n = c.n_total
     k_v, k_sim = jax.random.split(jax.random.PRNGKey(0) if key is None else key)
     V = (jnp.asarray(c.v0_mean)
          + jnp.asarray(c.v0_sd) * jax.random.normal(k_v, (n,), jnp.float32))
     neuron = NeuronState(
-        V=V.astype(w_ext_dtype),
-        I_ex=jnp.zeros((n,), w_ext_dtype),
-        I_in=jnp.zeros((n,), w_ext_dtype),
+        V=V.astype(state_dtype),
+        I_ex=jnp.zeros((n,), state_dtype),
+        I_in=jnp.zeros((n,), state_dtype),
         refrac=jnp.zeros((n,), jnp.int32),
     )
-    ring = jnp.zeros((c.d_max_bins, 2, n + 1), w_ext_dtype)
+    ring = jnp.zeros((c.d_max_bins, 2, n + 1), state_dtype)
     return SimState(neuron=neuron, ring=ring, t=jnp.zeros((), jnp.int32),
                     key=k_sim, overflow=jnp.zeros((), jnp.int32))
 
@@ -154,16 +176,26 @@ def deliver_phase(state: SimState, net: Network, cfg: SimConfig,
 # ---------------------------------------------------------------------------
 
 def make_step(net: Network, prop: Propagators, cfg: SimConfig,
-              w_ext: float, n: int, n_exc: int):
+              w_ext: float, n: int, n_exc: int, n_pops: int = 8,
+              record_fn: Optional[Callable] = None):
+    """Build the fused update+deliver step.
+
+    ``record_fn(state, spiked) -> pytree`` overrides the legacy
+    ``cfg.record`` enum (the probe system in ``repro.api`` uses this hook).
+    ``n_pops`` is the static population count for pop_counts recording —
+    derive it from the ``Connectome`` (``len(c.pop_sizes)``), not a literal.
+    """
     def step(state: SimState, _):
         state, spiked = update_phase(state, net, prop, cfg, w_ext, n)
         state = deliver_phase(state, net, cfg, spiked, n_exc)
-        if cfg.record == "spikes":
+        if record_fn is not None:
+            out = record_fn(state, spiked)
+        elif cfg.record == "spikes":
             out = spiked
         elif cfg.record == "pop_counts":
             out = jax.ops.segment_sum(
                 spiked.astype(jnp.int32), net.pop_of,
-                num_segments=8, indices_are_sorted=True)
+                num_segments=n_pops, indices_are_sorted=True)
         else:
             out = jnp.zeros((), jnp.int32)
         return state, out
@@ -171,10 +203,10 @@ def make_step(net: Network, prop: Propagators, cfg: SimConfig,
 
 
 @functools.partial(jax.jit, static_argnames=("n_steps", "cfg", "prop",
-                                             "w_ext", "n", "n_exc"))
+                                             "w_ext", "n", "n_exc", "n_pops"))
 def _run(state, net, n_steps: int, cfg: SimConfig, prop: Propagators,
-         w_ext: float, n: int, n_exc: int):
-    step = make_step(net, prop, cfg, w_ext, n, n_exc)
+         w_ext: float, n: int, n_exc: int, n_pops: int = 8):
+    step = make_step(net, prop, cfg, w_ext, n, n_exc, n_pops)
     return jax.lax.scan(step, state, None, length=n_steps)
 
 
@@ -186,16 +218,23 @@ def simulate(c: Connectome, t_sim_ms: float, cfg: SimConfig,
 
     Returns (final_state, recorded, net) where ``recorded`` has leading axis
     n_steps.
+
+    .. deprecated:: use ``repro.api.Simulator`` for new code; this shim
+       stays for the original single-shot call signature.
     """
+    warnings.warn(
+        "repro.core.engine.simulate is deprecated; use repro.api.Simulator",
+        DeprecationWarning, stacklevel=2)
     neuron = neuron or NeuronParams()
     prop = Propagators.make(neuron, cfg.dt)
     if net is None:
         net = prepare_network(c, cfg)
     if state is None:
-        state = init_state(c, key)
+        state = init_state(c, key, cfg.state_dtype)
     n_steps = int(round(t_sim_ms / cfg.dt))
     final, recorded = _run(state, net, n_steps, cfg, prop,
-                           c.w_ext, c.n_total, c.n_exc)
+                           c.w_ext, c.n_total, c.n_exc,
+                           n_pops=len(c.pop_sizes))
     return final, recorded, net
 
 
@@ -206,35 +245,27 @@ def simulate(c: Connectome, t_sim_ms: float, cfg: SimConfig,
 class PhaseRunner:
     """Runs the cycle with each phase a separate jitted function.
 
-    Slower than the fused scan (per-step dispatch) but lets the benchmark
-    harness time update/deliver separately, as the paper's timers do.
+    .. deprecated:: thin shim over ``repro.api.backends.
+       InstrumentedBackend`` — use ``Simulator(cfg,
+       backend="instrumented")`` in new code; its ``RunResult.timers``
+       carries the same per-phase accounting.
     """
 
     def __init__(self, c: Connectome, cfg: SimConfig,
                  neuron: Optional[NeuronParams] = None, key=None):
-        neuron = neuron or NeuronParams()
+        warnings.warn(
+            "PhaseRunner is deprecated; use repro.api.Simulator with "
+            "backend='instrumented'", DeprecationWarning, stacklevel=2)
+        from repro.api.backends import InstrumentedBackend
+        self._backend = InstrumentedBackend()
+        self._backend.build(c, cfg, neuron)
         self.cfg = cfg
-        self.prop = Propagators.make(neuron, cfg.dt)
-        self.net = prepare_network(c, cfg)
-        self.state = init_state(c, key)
+        self.prop = self._backend.prop
+        self.net = self._backend.net
+        self.state = self._backend.init(key)
         self.n, self.n_exc = c.n_total, c.n_exc
         self.w_ext = c.w_ext
 
-        self._update = jax.jit(lambda s: update_phase(
-            s, self.net, self.prop, cfg, self.w_ext, self.n))
-        self._deliver = jax.jit(lambda s, spk: deliver_phase(
-            s, self.net, cfg, spk, self.n_exc))
-
     def step_timed(self, timers: dict):
-        import time
-        t0 = time.perf_counter()
-        state, spiked = self._update(self.state)
-        spiked.block_until_ready()
-        t1 = time.perf_counter()
-        state = self._deliver(state, spiked)
-        jax.block_until_ready(state)
-        t2 = time.perf_counter()
-        timers["update"] = timers.get("update", 0.0) + (t1 - t0)
-        timers["deliver"] = timers.get("deliver", 0.0) + (t2 - t1)
-        self.state = state
+        self.state, spiked = self._backend.step_timed(self.state, timers)
         return spiked

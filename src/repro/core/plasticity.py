@@ -199,7 +199,8 @@ def simulate_plastic(c: Connectome, t_sim_ms: float, sim_cfg, stdp_cfg,
         ps = stdp_step(ps, tables, spiked, stdp_cfg,
                        sim_cfg.spike_budget, c.n_exc)
         counts = jax.ops.segment_sum(spiked.astype(jnp.int32), net.pop_of,
-                                     num_segments=8, indices_are_sorted=True)
+                                     num_segments=len(c.pop_sizes),
+                                     indices_are_sorted=True)
         mean_w = jnp.sum(jnp.where(
             plastic_mask, ps.weights[:plastic_mask.shape[0]],
             0.0)) / n_plastic

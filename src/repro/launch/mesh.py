@@ -9,20 +9,27 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh_auto(shape, axes) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with Auto axis types where the installed jax
+    supports them (>= 0.5); plain mesh otherwise (Auto is the default)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """(16, 16) ('data','model') per pod; (2, 16, 16) with a 'pod' axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_auto(shape, axes)
 
 
 def make_host_mesh() -> jax.sharding.Mesh:
     """Whatever this process actually has (1 CPU device in the container)."""
     n = len(jax.devices())
-    return jax.make_mesh((1, n), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh_auto((1, n), ("data", "model"))
 
 
 # TPU v5e hardware constants used by the roofline analysis.

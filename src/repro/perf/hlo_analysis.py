@@ -64,6 +64,24 @@ def _shape_dims(type_str: str):
     return [int(d) for d in m.group(2).split(",") if d]
 
 
+def _operand_names(line: str):
+    """Operand instruction names of an HLO line.
+
+    Handles both operand syntaxes XLA emits: bare (``dot(%a, %b)``) and
+    typed (``dot(f32[32,64]{1,0} %a, ...)``) — operand references are the
+    ``%``-prefixed tokens (shape strings contain commas, so a plain
+    comma-split is wrong).
+    """
+    ops = re.findall(r"\(([^)]*)\)", line)
+    if not ops:
+        return []
+    names = re.findall(r"%([\w.-]+)", ops[0])
+    if names:
+        return names
+    # bare un-prefixed names (plain comma-separated list)
+    return [a.strip() for a in ops[0].split(",") if a.strip()]
+
+
 class Instr:
     __slots__ = ("name", "type_str", "op", "line")
 
@@ -193,13 +211,8 @@ def analyze_hlo(hlo: str) -> dict:
                     res *= d
                 contract = 1
                 mc = _CONTRACT_RE.search(ins.line)
-                ops = re.findall(r"\(([^)]*)\)", ins.line)
-                lhs_name = None
-                if ops:
-                    args = [a.strip().lstrip("%") for a in
-                            ops[0].split(",")]
-                    if args:
-                        lhs_name = args[0]
+                args = _operand_names(ins.line)
+                lhs_name = args[0] if args else None
                 if mc and lhs_name and lhs_name in shapes:
                     lhs_dims = _shape_dims(shapes[lhs_name])
                     for d in mc.group(1).split(","):
@@ -228,12 +241,9 @@ def analyze_hlo(hlo: str) -> dict:
             if cname not in fused and ins.op not in _SKIP_BYTES \
                     and not ins.op.endswith("-done"):
                 b = _shape_bytes(ins.type_str)
-                ops = re.findall(r"\(([^)]*)\)", ins.line)
-                if ops:
-                    for a in ops[0].split(","):
-                        a = a.strip().lstrip("%")
-                        if a in shapes:
-                            b += _shape_bytes(shapes[a])
+                for a in _operand_names(ins.line):
+                    if a in shapes:
+                        b += _shape_bytes(shapes[a])
                 hbm += mult * b
 
     top_tags = dict(sorted(coll_tags.items(), key=lambda kv: -kv[1])[:12])

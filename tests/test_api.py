@@ -1,0 +1,152 @@
+"""Unified Simulator session API: backend equivalence, chunking, probes,
+checkpoint/restore, and the legacy-shim contract."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import Simulator, custom
+from repro.api.backends import FusedBackend
+from repro.configs.microcircuit import SMOKE
+
+# presim is exercised explicitly in its own test; elsewhere keep runs short
+CFG = dataclasses.replace(SMOKE, t_presim=0.0)
+T_MS = 20.0
+
+
+@pytest.fixture(scope="module")
+def smoke_c():
+    from repro.core import build_connectome
+    return build_connectome(n_scaling=CFG.n_scaling,
+                            k_scaling=CFG.k_scaling, seed=CFG.seed)
+
+
+@pytest.fixture(scope="module")
+def fused_result(smoke_c):
+    sim = Simulator(CFG, connectome=smoke_c)
+    return sim, sim.run(T_MS)
+
+
+def test_fused_vs_instrumented_identical(fused_result, smoke_c):
+    """The acceptance check: both backends produce identical pop_counts."""
+    _, res_f = fused_result
+    sim_i = Simulator(CFG, connectome=smoke_c, backend="instrumented")
+    res_i = sim_i.run(T_MS)
+    np.testing.assert_array_equal(res_f["pop_counts"], res_i["pop_counts"])
+    assert res_i.timers["update"] > 0 and res_i.timers["deliver"] > 0
+
+
+def test_sharded_backend_matches_fused(fused_result, smoke_c):
+    """NEST's distribution scheme behind the same surface (a 1-device mesh
+    reproduces the fused RNG path bit-exactly)."""
+    _, res_f = fused_result
+    sim_s = Simulator(CFG, connectome=smoke_c, backend="sharded")
+    res_s = sim_s.run(T_MS)
+    np.testing.assert_array_equal(res_f["pop_counts"], res_s["pop_counts"])
+
+
+def test_run_chunked_equals_single_run(fused_result, smoke_c):
+    _, res_f = fused_result
+    sim_c = Simulator(CFG, connectome=smoke_c)
+    res_c = sim_c.run_chunked(T_MS, chunk_ms=7.5)   # uneven chunking
+    assert res_c.n_steps == res_f.n_steps
+    np.testing.assert_array_equal(res_f["pop_counts"], res_c["pop_counts"])
+
+
+def test_checkpoint_restore_resume(tmp_path, smoke_c):
+    """save -> restore in a fresh session -> resumed run is bit-identical."""
+    d = str(tmp_path / "ckpt")
+    sim = Simulator(CFG, connectome=smoke_c)
+    sim.run(10.0)
+    sim.save(d)
+    want = sim.run(10.0)
+
+    sim2 = Simulator(CFG, connectome=smoke_c)
+    sim2.restore(d)
+    got = sim2.run(10.0)
+    np.testing.assert_array_equal(want["pop_counts"], got["pop_counts"])
+
+
+def test_matches_legacy_simulate_shim(fused_result):
+    """The deprecated engine.simulate front-end computes the same dynamics."""
+    from repro.core import simulate
+    from repro.core.engine import SimConfig
+    sim, res_f = fused_result
+    cfg = SimConfig(strategy=CFG.strategy, spike_budget=CFG.spike_budget,
+                    record="pop_counts")
+    _, rec, _ = simulate(sim.connectome, T_MS, cfg,
+                         key=jax.random.PRNGKey(CFG.seed))
+    np.testing.assert_array_equal(res_f["pop_counts"], np.asarray(rec))
+
+
+def test_presim_transient_runs_once(smoke_c):
+    """The presim discard advances state exactly once per session."""
+    cfg = dataclasses.replace(SMOKE, t_presim=5.0)
+    sim = Simulator(cfg, connectome=smoke_c)
+    sim.run(5.0)
+    assert sim._presim_done
+    steps_after_first = sim._steps_done           # presim is not counted
+    sim.run(5.0)
+    assert sim._steps_done == 2 * steps_after_first
+
+    # presim + run == one unrecorded-then-recorded run of the same session
+    ref = Simulator(CFG, connectome=smoke_c)
+    ref.run(5.0, probes=())
+    want = ref.run(5.0)
+    got = Simulator(cfg, connectome=smoke_c).run(5.0, presim_ms=5.0)
+    np.testing.assert_array_equal(want["pop_counts"], got["pop_counts"])
+
+
+def test_probe_shapes_and_custom(smoke_c):
+    n_every = custom("every_third_v",
+                     lambda ctx: ctx.state.neuron.V[::3])
+    sim = Simulator(CFG, connectome=smoke_c,
+                    probes=("pop_counts", "spikes", "voltage",
+                            "total_counts", n_every))
+    res = sim.run(3.0)
+    n = sim.connectome.n_total
+    n_steps = res.n_steps
+    assert res["pop_counts"].shape == (n_steps, len(sim.connectome.pop_sizes))
+    assert res["spikes"].shape == (n_steps, n)
+    assert res["voltage"].shape == (n_steps, n)
+    assert res["total_counts"].shape == (n_steps,)
+    assert res["every_third_v"].shape == (n_steps, len(range(0, n, 3)))
+    np.testing.assert_array_equal(res["pop_counts"].sum(axis=1),
+                                  res["spikes"].sum(axis=1))
+
+
+def test_stdp_composes_into_fused_backend(smoke_c):
+    sim = Simulator(CFG, connectome=smoke_c, stdp=True,
+                    probes=("pop_counts", "mean_plastic_weight"))
+    res = sim.run(30.0)
+    mw = res["mean_plastic_weight"]
+    assert mw.shape == (res.n_steps,)
+    assert np.isfinite(mw).all() and (mw > 0).all()
+    # weights actually move once activity flows
+    assert mw[-1] != mw[0]
+
+
+def test_probe_validation_errors(smoke_c):
+    with pytest.raises(ValueError, match="unknown probe"):
+        Simulator(CFG, connectome=smoke_c, probes=("nope",))
+    with pytest.raises(NotImplementedError, match="sharded"):
+        Simulator(CFG, connectome=smoke_c, backend="sharded",
+                  probes=("voltage",))
+    with pytest.raises(NotImplementedError, match="stdp"):
+        Simulator(CFG, connectome=smoke_c, backend="instrumented",
+                  stdp=True)
+
+
+def test_state_dtype_threads_through(smoke_c):
+    import jax.numpy as jnp
+    sim = Simulator(CFG, connectome=smoke_c, state_dtype=jnp.bfloat16)
+    assert sim.state.neuron.V.dtype == jnp.bfloat16
+    assert sim.state.ring.dtype == jnp.bfloat16
+
+
+def test_backend_instance_and_rtf_accounting(smoke_c):
+    sim = Simulator(CFG, connectome=smoke_c, backend=FusedBackend())
+    res = sim.run(3.0)
+    assert res.wall_s > 0 and res.rtf == res.wall_s / (res.t_model_ms * 1e-3)
+    assert res.overflow == 0

@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # hypothesis is optional: fall back to fixed cases
+    given = settings = st = None
 
 from repro.core.neuron import NeuronParams, NeuronState, Propagators
 from repro.kernels import ops, ref
@@ -30,9 +34,7 @@ def test_lif_update_matches_ref(n):
     np.testing.assert_array_equal(np.asarray(sp1), np.asarray(sp2))
 
 
-@settings(max_examples=10, deadline=None)
-@given(dt=st.sampled_from([0.05, 0.1, 0.25]), n=st.integers(1, 300))
-def test_lif_update_property(dt, n):
+def _check_lif_update_property(dt, n):
     prop = Propagators.make(NeuronParams(), dt)
     st_ = NeuronState(V=jnp.full((n,), -60.0), I_ex=jnp.full((n,), 10.0),
                       I_in=jnp.zeros(n), refrac=jnp.zeros(n, jnp.int32))
@@ -40,6 +42,17 @@ def test_lif_update_property(dt, n):
     s1, _ = ops.lif_update(st_, prop, z, z, z)
     s2, _ = ref.lif_update_ref(st_, prop, z, z, z)
     np.testing.assert_allclose(np.asarray(s1.V), np.asarray(s2.V), rtol=1e-6)
+
+
+if st is not None:
+    @settings(max_examples=10, deadline=None)
+    @given(dt=st.sampled_from([0.05, 0.1, 0.25]), n=st.integers(1, 300))
+    def test_lif_update_property(dt, n):
+        _check_lif_update_property(dt, n)
+else:
+    @pytest.mark.parametrize("dt,n", [(0.05, 1), (0.1, 128), (0.25, 300)])
+    def test_lif_update_property(dt, n):
+        _check_lif_update_property(dt, n)
 
 
 # ---------------------------------------------------------- gated matvec

@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # hypothesis is optional: fall back to fixed cases
+    given = settings = st = None
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.models.model import build
@@ -134,10 +137,7 @@ def test_chunked_prefill(arch, key):
 
 
 # ------------------------------------------------------------------- MoE
-@settings(max_examples=10, deadline=None)
-@given(e=st.sampled_from([4, 8]), k=st.integers(1, 3),
-       seed=st.integers(0, 5))
-def test_moe_invariants(e, k, seed):
+def _check_moe_invariants(e, k, seed):
     import dataclasses
     from repro.models import moe as M
     cfg = dataclasses.replace(get_smoke_config("deepseek-moe-16b"),
@@ -155,6 +155,18 @@ def test_moe_invariants(e, k, seed):
     # load-balance loss >= 1 (equality at perfect balance), bounded
     assert 0.9 <= float(aux["lb_loss"]) < e + 1
     assert 0.0 <= float(aux["dropped_frac"]) <= 1.0
+
+
+if st is not None:
+    @settings(max_examples=10, deadline=None)
+    @given(e=st.sampled_from([4, 8]), k=st.integers(1, 3),
+           seed=st.integers(0, 5))
+    def test_moe_invariants(e, k, seed):
+        _check_moe_invariants(e, k, seed)
+else:
+    @pytest.mark.parametrize("e,k,seed", [(4, 1, 0), (8, 2, 3), (8, 3, 5)])
+    def test_moe_invariants(e, k, seed):
+        _check_moe_invariants(e, k, seed)
 
 
 def test_moe_zero_when_all_dropped():

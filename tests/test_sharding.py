@@ -2,7 +2,10 @@
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # hypothesis is optional: fall back to fixed cases
+    given = settings = st = None
 from jax.sharding import PartitionSpec as P
 
 from repro.launch.mesh import make_host_mesh
@@ -51,14 +54,7 @@ def test_no_axis_reuse_within_tensor():
     assert spec2 == P("model")         # second occurrence dropped
 
 
-@settings(max_examples=50, deadline=None)
-@given(
-    dims=st.lists(st.sampled_from([1, 2, 8, 13, 40, 64, 128, 256, 4096]),
-                  min_size=1, max_size=4),
-    names=st.lists(st.sampled_from(["batch", "heads", "embed", "mlp",
-                                    "kv_seq", "vocab", None]),
-                   min_size=1, max_size=4))
-def test_resolver_properties(dims, names):
+def _check_resolver_properties(dims, names):
     n = min(len(dims), len(names))
     dims, names = dims[:n], names[:n]
     spec = R.resolve(tuple(names), tuple(dims), MESH2, R.ACT_RULES)
@@ -72,6 +68,26 @@ def test_resolver_properties(dims, names):
             used.append(a)
             prod *= sizes[a]
         assert dim % prod == 0              # always divisible
+
+
+if st is not None:
+    @settings(max_examples=50, deadline=None)
+    @given(
+        dims=st.lists(st.sampled_from([1, 2, 8, 13, 40, 64, 128, 256, 4096]),
+                      min_size=1, max_size=4),
+        names=st.lists(st.sampled_from(["batch", "heads", "embed", "mlp",
+                                        "kv_seq", "vocab", None]),
+                       min_size=1, max_size=4))
+    def test_resolver_properties(dims, names):
+        _check_resolver_properties(dims, names)
+else:
+    @pytest.mark.parametrize("dims,names", [
+        ((4096, 128), ("embed", "heads")),
+        ((1, 13, 40), ("batch", None, "mlp")),
+        ((256, 4096, 64, 8), ("vocab", "embed", "kv_seq", "batch")),
+    ])
+    def test_resolver_properties(dims, names):
+        _check_resolver_properties(list(dims), list(names))
 
 
 def test_param_sharding_tree(key):
