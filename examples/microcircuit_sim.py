@@ -26,7 +26,7 @@ def main():
                     help="model time (ms); the paper uses 10000")
     ap.add_argument("--t-presim", type=float, default=100.0)
     ap.add_argument("--strategy", default="event",
-                    choices=["event", "dense"])
+                    choices=["event", "dense", "ell"])
     ap.add_argument("--backend", default="fused",
                     choices=["fused", "instrumented", "sharded"])
     ap.add_argument("--chunk", type=float, default=0.0,

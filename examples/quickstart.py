@@ -9,9 +9,10 @@ from repro.configs.microcircuit import MicrocircuitConfig
 
 # 5 % of the full network (77k neurons / 300M synapses at scale 1.0),
 # with van-Albada DC compensation so firing rates stay realistic.
-cfg = MicrocircuitConfig(n_scaling=0.05, k_scaling=0.05, seed=55,
-                         strategy="event",    # NEST-style event delivery
-                         spike_budget=256,    # static per-step spike capacity
+cfg = MicrocircuitConfig(scale=0.05,          # n & k scaling in one knob
+                         seed=55,
+                         strategy="event",    # delivery: event | dense | ell
+                         spike_budget=None,   # rate-derived auto capacity
                          t_presim=100.0)      # discarded startup transient
 
 sim = Simulator(cfg, probes=("pop_counts",))

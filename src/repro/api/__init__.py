@@ -10,6 +10,7 @@ recording.
 """
 from repro.api.backends import (Backend, FusedBackend, InstrumentedBackend,
                                 ShardedBackend, make_backend)
+from repro.core.delivery import DeliveryOverflowError
 from repro.api.probes import (Probe, ProbeContext, custom,
                               mean_plastic_weight, pop_counts, spikes,
                               total_counts, voltage)
@@ -17,7 +18,7 @@ from repro.api.results import RunResult
 from repro.api.simulator import Simulator
 
 __all__ = [
-    "Simulator", "RunResult",
+    "Simulator", "RunResult", "DeliveryOverflowError",
     "Backend", "FusedBackend", "InstrumentedBackend", "ShardedBackend",
     "make_backend",
     "Probe", "ProbeContext", "custom", "mean_plastic_weight", "pop_counts",

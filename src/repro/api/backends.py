@@ -15,7 +15,13 @@ Three engines from the seed repo are adapted:
 * ``instrumented`` — each phase a separately jitted call with wall-clock
                      timers (absorbs the old ``engine.PhaseRunner``),
 * ``sharded``      — NEST's distribution scheme over a device mesh
-                     (``distributed.localize_ell`` + ``make_sharded_step``).
+                     (``DeliveryStrategy.localize`` shard transform +
+                     ``distributed.make_sharded_step``).
+
+Each ``build`` resolves the ``SimConfig`` against the connectome first
+(``resolve_sim_config``): the delivery-strategy name is validated against
+the registry and an unset ``spike_budget`` becomes the rate-derived auto
+value, so the resolved config is what the jitted step closures capture.
 
 ``run`` is pure in the state: callers (the Simulator) thread the returned
 state, which is what makes warmup-compilation, chunked long runs and
@@ -36,7 +42,8 @@ from repro.core import delivery as dlv
 from repro.core import distributed as DD
 from repro.core.connectivity import Connectome
 from repro.core.engine import (SimConfig, SimState, deliver_phase, init_state,
-                               make_step, prepare_network, update_phase)
+                               make_step, prepare_network, resolve_sim_config,
+                               update_phase)
 from repro.core.neuron import NeuronParams, Propagators
 
 
@@ -91,6 +98,7 @@ class FusedBackend(Backend):
         self._aot: Dict[Any, Any] = {}
 
     def build(self, c, cfg, neuron=None):
+        cfg = resolve_sim_config(cfg, c)    # auto spike budget, name check
         self.c, self.cfg = c, cfg
         self.prop = Propagators.make(neuron or NeuronParams(), cfg.dt)
         self.net = prepare_network(c, cfg)
@@ -199,6 +207,7 @@ class InstrumentedBackend(Backend):
         self._warmed: set = set()
 
     def build(self, c, cfg, neuron=None):
+        cfg = resolve_sim_config(cfg, c)
         self.c, self.cfg = c, cfg
         self.prop = Propagators.make(neuron or NeuronParams(), cfg.dt)
         self.net = prepare_network(c, cfg)
@@ -275,12 +284,16 @@ class InstrumentedBackend(Backend):
 # ---------------------------------------------------------------------------
 
 class ShardedBackend(Backend):
-    """Wraps ``distributed.localize_ell`` + ``make_sharded_step``.
+    """Wraps the delivery strategy's shard transform + ``make_sharded_step``.
 
-    Records population counts through the same ``pop_counts`` probe surface
-    (the all-gathered spike registry is reduced in-scan, replicated across
-    devices). Probe support is restricted to reductions computable from the
-    spike registry: ``pop_counts`` and ``total_counts``.
+    The connectome is regrouped by target-owning device through
+    ``DeliveryStrategy.localize`` (for the ELL-layout strategies this is
+    ``distributed.localize_ell``); strategies without a shard transform
+    (e.g. ``dense``) are rejected at build time.  Records population counts
+    through the same ``pop_counts`` probe surface (the all-gathered spike
+    registry is reduced in-scan, replicated across devices). Probe support
+    is restricted to reductions computable from the spike registry:
+    ``pop_counts`` and ``total_counts``.
     """
 
     name = "sharded"
@@ -292,9 +305,13 @@ class ShardedBackend(Backend):
         self._aot: Dict[int, Any] = {}
 
     def build(self, c, cfg, neuron=None):
-        if cfg.strategy != "event":
-            raise ValueError("sharded backend implements the event (ELL) "
-                             "strategy only")
+        cfg = resolve_sim_config(cfg, c)
+        strategy = dlv.get_strategy(cfg.strategy)
+        if not strategy.supports_sharding:
+            raise ValueError(
+                f"sharded backend needs a delivery strategy with a shard "
+                f"transform (ELL layout); {cfg.strategy!r} provides none — "
+                f"use strategy='event' or 'ell'")
         self.c, self.cfg = c, cfg
         self.prop = Propagators.make(neuron or NeuronParams(), cfg.dt)
         n_dev = self.n_devices or len(jax.devices())
@@ -304,7 +321,7 @@ class ShardedBackend(Backend):
         self.n_dev = n_dev
         from repro.launch.mesh import make_mesh_auto
         self.mesh = make_mesh_auto((n_dev,), ("flat",))
-        self.tables, self.meta = DD.localize_ell(c, n_dev)
+        self.tables, self.meta = strategy.localize(c, n_dev)
         self.n_pops = len(c.pop_sizes)
         # global population index padded with a sentinel population so the
         # in-scan segment_sum can drop the padding neurons

@@ -22,6 +22,10 @@ class RunResult:
     ``wall_s`` covers the timed simulation phase only — the presim
     transient and compilation warmup are excluded when the caller follows
     the RTF recipe (``Simulator.warmup`` + presim, then ``run``).
+    ``overflow`` is the session-cumulative count of spikes dropped by the
+    event/ell delivery budget; any increase is also surfaced as a warning
+    by the Simulator (or as ``DeliveryOverflowError`` under
+    ``SimConfig.strict_delivery``), never silently.
     """
     data: Dict[str, np.ndarray]
     t_model_ms: float

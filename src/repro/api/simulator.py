@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Callable, Optional, Sequence
 
 import jax
@@ -45,10 +46,13 @@ class Simulator:
     Parameters
     ----------
     config:
-        A model config with ``n_scaling / k_scaling / dt / strategy /
-        spike_budget / seed / t_presim`` fields (e.g.
-        ``repro.configs.microcircuit.MicrocircuitConfig``). Optional when a
-        ``connectome`` is supplied directly.
+        A model config with ``scale / n_scaling / k_scaling / dt /
+        strategy / spike_budget / seed / t_presim`` fields (e.g.
+        ``repro.configs.microcircuit.MicrocircuitConfig``). ``scale`` sets
+        both scalings at once (NEST-style down-scaling with DC
+        compensation); ``spike_budget=None`` derives the event/ell budget
+        from the expected rates. Optional when a ``connectome`` is
+        supplied directly.
     connectome:
         Pre-built :class:`Connectome` (skips instantiation).
     backend:
@@ -75,6 +79,7 @@ class Simulator:
         seed = int(getattr(config, "seed", 0))
         if connectome is None:
             connectome = build_connectome(
+                scale=getattr(config, "scale", None),
                 n_scaling=config.n_scaling, k_scaling=config.k_scaling,
                 seed=seed, dt=config.dt)
         self.connectome = connectome
@@ -83,7 +88,8 @@ class Simulator:
             sim_config = SimConfig(
                 dt=getattr(config, "dt", 0.1),
                 strategy=getattr(config, "strategy", "event"),
-                spike_budget=getattr(config, "spike_budget", 512),
+                spike_budget=getattr(config, "spike_budget", None),
+                strict_delivery=getattr(config, "strict_delivery", False),
             )
         if overrides:
             sim_config = dataclasses.replace(sim_config, **overrides)
@@ -96,6 +102,8 @@ class Simulator:
         self.backend: Backend = make_backend(backend, stdp=stdp,
                                              n_devices=n_devices)
         self.backend.build(connectome, sim_config, neuron)
+        # backends resolve the config (auto spike budget etc.); expose it
+        self.sim_config = getattr(self.backend, "cfg", sim_config)
 
         self.probes = probes_mod.resolve(probes)
         for p in self.probes:
@@ -117,6 +125,7 @@ class Simulator:
         self._presim_done = False
         self._steps_done = 0
         self._t_model_ms = 0.0
+        self._overflow_seen = 0
 
     @property
     def state(self):
@@ -150,6 +159,7 @@ class Simulator:
         self._state, _ = self.backend.run(self._state, self._steps(t), ())
         jax.block_until_ready(self._state)
         self._presim_done = True
+        self._check_overflow()
 
     # -- runs ---------------------------------------------------------------
 
@@ -173,11 +183,31 @@ class Simulator:
         self._t_model_ms += n_steps * self.sim_config.dt
         timers = {k: v - timers0.get(k, 0.0)
                   for k, v in self.timers.items()}
+        overflow = self._check_overflow()
         return RunResult(
             data=dict(data), t_model_ms=n_steps * self.sim_config.dt,
             n_steps=n_steps, dt=self.sim_config.dt, wall_s=wall,
-            overflow=self.backend.overflow(self._state), timers=timers,
+            overflow=overflow, timers=timers,
             _connectome=self.connectome)
+
+    def _check_overflow(self) -> int:
+        """Surface dropped spikes: warn on any new overflow since the last
+        run, raise under ``SimConfig.strict_delivery``."""
+        overflow = self.backend.overflow(self._state)
+        if overflow > self._overflow_seen:
+            msg = (f"spike delivery dropped {overflow - self._overflow_seen}"
+                   f" spike(s) this run ({overflow} cumulative): the "
+                   f"per-step spike_budget="
+                   f"{self.sim_config.spike_budget} of strategy "
+                   f"{self.sim_config.strategy!r} was exceeded — raise "
+                   f"spike_budget (or leave it None for the rate-derived "
+                   f"auto value)")
+            self._overflow_seen = overflow
+            if self.sim_config.strict_delivery:
+                from repro.core.delivery import DeliveryOverflowError
+                raise DeliveryOverflowError(msg)
+            warnings.warn(msg, stacklevel=3)
+        return overflow
 
     def run_chunked(self, t_ms: float, chunk_ms: float, *,
                     presim_ms: Optional[float] = None,
@@ -190,7 +220,10 @@ class Simulator:
         (state threads through chunk boundaries), but probe data lands on
         the host after every chunk (bounded device memory), ``callback(i,
         chunk_result)`` can stream statistics, and ``checkpoint_dir``
-        persists the session every ``checkpoint_every`` chunks."""
+        persists the session every ``checkpoint_every`` chunks.  If
+        ``strict_delivery`` aborts the run mid-way, the raised
+        ``DeliveryOverflowError`` carries the completed chunks as its
+        ``partial`` attribute."""
         if chunk_ms <= 0:
             raise ValueError("chunk_ms must be positive")
         self._maybe_presim(presim_ms)
@@ -201,8 +234,15 @@ class Simulator:
         done = 0
         while done < total:
             n = min(per_chunk, total - done)
-            res = self.run(n * self.sim_config.dt, presim_ms=0,
-                           probes=probes)
+            try:
+                res = self.run(n * self.sim_config.dt, presim_ms=0,
+                               probes=probes)
+            except Exception as e:
+                from repro.core.delivery import DeliveryOverflowError
+                if isinstance(e, DeliveryOverflowError) and chunks:
+                    # strict abort mid-run: don't lose the completed chunks
+                    e.partial = results_mod.concat(chunks)
+                raise
             res.data = {k: np.asarray(v) for k, v in res.data.items()}
             chunks.append(res)
             done += n
@@ -248,3 +288,4 @@ class Simulator:
         self._presim_done = bool(int(pkg["presim_done"]))
         self._steps_done = int(pkg["steps_done"])
         self._t_model_ms = float(pkg["t_model_ms"])
+        self._overflow_seen = self.backend.overflow(self._state)

@@ -5,19 +5,22 @@ Not an LM architecture — selected via ``--arch microcircuit`` in
 it alongside the 40 LM cells).
 """
 import dataclasses
+from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)
 class MicrocircuitConfig:
     name: str = "microcircuit"
     family: str = "snn"
+    scale: Optional[float] = None   # sets n_scaling = k_scaling at once
     n_scaling: float = 1.0
     k_scaling: float = 1.0
     dt: float = 0.1              # ms
     t_sim: float = 10000.0       # ms, the paper's strong-scaling task (10 s)
     t_presim: float = 100.0      # ms discarded transient
-    strategy: str = "event"      # event | dense
-    spike_budget: int = 512
+    strategy: str = "event"      # delivery registry: event | dense | ell
+    spike_budget: Optional[int] = None   # None -> rate-derived auto
+    strict_delivery: bool = False        # raise on dropped spikes
     seed: int = 55
 
 

@@ -1,11 +1,16 @@
 """Core: the paper's contribution — full-density microcircuit simulation."""
 from repro.core.connectivity import Connectome, build_connectome
-from repro.core.engine import Network, PhaseRunner, SimConfig, SimState, simulate
+from repro.core.delivery import (DeliveryOverflowError, DeliveryStrategy,
+                                 available_strategies, get_strategy)
+from repro.core.engine import (Network, PhaseRunner, SimConfig, SimState,
+                               resolve_sim_config, simulate)
 from repro.core.neuron import NeuronParams, NeuronState, Propagators, lif_step
 from repro.core import params, recording
 
 __all__ = [
     "Connectome", "build_connectome", "Network", "PhaseRunner", "SimConfig",
-    "SimState", "simulate", "NeuronParams", "NeuronState", "Propagators",
-    "lif_step", "params", "recording",
+    "SimState", "simulate", "resolve_sim_config", "NeuronParams",
+    "NeuronState", "Propagators", "lif_step", "params", "recording",
+    "DeliveryOverflowError", "DeliveryStrategy", "available_strategies",
+    "get_strategy",
 ]

@@ -5,14 +5,18 @@ K[t, s] synapses are drawn with independently uniform source and target
 neurons (multapses and autapses allowed).  We build two device-ready
 representations of the same connectome:
 
-* **ELL (event strategy)** — padded per-source adjacency: for every source
-  neuron a fixed-width row of (target id, weight, delay bin).  Rows are padded
-  with a sentinel target ``N`` (one dump column is appended to the ring buffer
-  so padded entries scatter into a discarded slot with weight 0).
+* **ELL (event / ell strategies)** — padded per-source adjacency: for every
+  source neuron a fixed-width row of (target id, weight, delay bin).  Rows
+  are padded with a sentinel target ``N`` (one dump column is appended to
+  the ring buffer so padded entries scatter into a discarded slot with
+  weight 0).  O(N*K) — the layout that reaches full scale; the ``ell``
+  strategy's Pallas kernel consumes it row-tile by row-tile.
 
 * **Dense delay-binned (dense strategy)** — ``W[Dbins, N_pre, N_post]`` with
   the signed weight summed into its delay bin.  Multapses sum, exactly as the
-  ring-buffer accumulation would.
+  ring-buffer accumulation would.  O(N^2) per bin: construction is guarded
+  by a byte estimate (``dense_bytes_estimate``) so large networks fail with
+  a pointer to ``strategy="ell"`` instead of OOM-ing.
 
 Both are produced by numpy on the host (this is model *instantiation*, the
 paper excludes it from the timed simulation phase as well).
@@ -70,7 +74,28 @@ def build_connectome(
     inp: Optional[P.InputParams] = None,
     dt: float = 0.1,
     k_pad_to: Optional[int] = None,
+    scale: Optional[float] = None,
 ) -> Connectome:
+    """Instantiate the microcircuit at any scale.
+
+    ``scale`` is the single NEST-style down-scaling knob: it sets both the
+    neuron-count scaling ``n_scaling`` and the in-degree scaling
+    ``k_scaling`` at once, with the lost recurrent/external mean input
+    compensated by a per-population DC current (van Albada et al. 2015) so
+    firing rates stay near the full-scale reference at every scale — the
+    ladder every delivery strategy is exercised on, from toy (~0.01) to the
+    paper's full density (1.0).  Passing ``scale`` together with an
+    explicit ``n_scaling``/``k_scaling`` is a conflict and raises.
+    """
+    if scale is not None:
+        if (n_scaling, k_scaling) != (1.0, 1.0):
+            raise ValueError(
+                "pass either scale= or n_scaling=/k_scaling=, not both "
+                f"(got scale={scale}, n_scaling={n_scaling}, "
+                f"k_scaling={k_scaling})")
+        if not 0.0 < scale <= 1.0:
+            raise ValueError(f"scale must be in (0, 1], got {scale}")
+        n_scaling = k_scaling = float(scale)
     neuron = neuron or P.NeuronParams()
     syn = syn or P.SynapseParams()
     inp = inp or P.InputParams()
@@ -187,14 +212,44 @@ def build_connectome(
     )
 
 
-def dense_delay_binned(c: Connectome, dtype=np.float32) -> np.ndarray:
+def dense_bytes_estimate(c: Connectome, itemsize: int = 4) -> int:
+    """Host-side footprint of the dense ``W[D, N, N]`` before allocating it."""
+    return int(c.d_max_bins) * int(c.n_total) ** 2 * itemsize
+
+
+#: Allocation cap for the dense strategy (overridable per call). At full
+#: scale the dense tensor is ~100 TB; the guard turns the inevitable OOM
+#: into an actionable error before any allocation happens.
+DENSE_MAX_BYTES = 8 * 1024 ** 3
+
+
+def dense_delay_binned(c: Connectome, dtype=np.float32,
+                       max_bytes: Optional[float] = None) -> np.ndarray:
     """``W[D, N_pre, N_post]`` dense representation (dense strategy).
 
     Multapses within the same (pre, post, delay-bin) sum — identical to what
     ring-buffer accumulation of individual events produces.
+
+    Guarded by a host-side byte estimate: exceeding ``max_bytes`` (default:
+    the module-level ``DENSE_MAX_BYTES``, read at call time so it can be
+    raised) fails with the sparse alternative spelled out instead of
+    OOM-ing mid-build.
     """
+    if max_bytes is None:
+        max_bytes = DENSE_MAX_BYTES
     D = c.d_max_bins
     n = c.n_total
+    est = dense_bytes_estimate(c, np.dtype(dtype).itemsize)
+    if est > max_bytes:
+        raise ValueError(
+            f"dense delay-binned tensor W[{D}, {n}, {n}] needs "
+            f"{est / 1e9:.1f} GB (> cap {max_bytes / 1e9:.1f} GB). The "
+            f"dense strategy is O(N^2) per delay bin and cannot reach this "
+            f"network size — use strategy='ell' (O(N*K) sparse-ELL Pallas "
+            f"delivery) or strategy='event', or shrink the network via "
+            f"build_connectome(scale=...). To force the allocation anyway "
+            f"call dense_delay_binned(c, max_bytes=...) directly or raise "
+            f"repro.core.connectivity.DENSE_MAX_BYTES.")
     W = np.zeros((D, n, n), dtype=dtype)
     rows = np.repeat(np.arange(n), c.targets.shape[1])
     cols = c.targets.reshape(-1)

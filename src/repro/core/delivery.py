@@ -1,29 +1,63 @@
-"""Spike-delivery strategies.
+"""Spike-delivery strategies: a pluggable protocol plus a registry.
 
 NEST delivers spikes event-wise: each spiking neuron's target list is walked
 and weights are accumulated into per-target ring buffers at slot
 ``(t + delay) mod D``.  The TPU adaptations keep the semantics but change the
-mechanism (DESIGN.md section 2):
+mechanism (DESIGN.md section 2).  Every mechanism is a
+:class:`DeliveryStrategy` registered under a name; ``SimConfig.strategy``
+selects one and the engine (``engine.deliver_phase``) dispatches through the
+registry instead of hardcoding branches:
 
-* ``event``  — budgeted event-driven: the <=S spike ids of the step gather
+* ``event`` — budgeted event-driven: the <=S spike ids of the step gather
   their padded ELL rows, and one large ``scatter-add`` accumulates all
-  ``S x K`` (target, weight, slot) triples into the ring buffer.
+  ``S x K`` (target, weight, slot) triples into the ring buffer.  The
+  per-step spike capacity ``spike_budget`` is rate-derived automatically
+  when left unset (:func:`auto_spike_budget`); spikes beyond the budget are
+  counted in the ``overflow`` state (surfaced by ``RunResult`` — never
+  silently dropped).
 
-* ``dense``  — delay-binned matrix delivery: the 0/1 spike vector multiplies
-  ``W[D, N_pre, N_post]`` on the MXU, and the ``[D, N_post]`` result is rolled
-  by ``t`` and added to the ring.  FLOP-wasteful (density ~0.1 per bin) but
-  bandwidth-streaming; the Pallas ``spike_deliver`` kernel recovers the
+* ``dense`` — delay-binned matrix delivery: the 0/1 spike vector multiplies
+  ``W[D, N_pre, N_post]`` on the MXU.  FLOP-wasteful (density ~0.1 per bin)
+  but bandwidth-streaming; the Pallas ``spike_deliver`` kernel recovers the
   sparsity by skipping weight tiles whose source-spike block is empty.
+  ``W`` is O(N^2) per delay bin, so ``prepare`` is guarded by a host-side
+  byte estimate — at full scale (N=77k, D=46 bins) it would be ~1.1 TB in
+  f32, two orders of magnitude past device HBM.
 
-Both write into ``ring[D, 2, N+1]``: channel 0/1 = excitatory/inhibitory
-arrivals, one trailing dump column absorbs padded scatters.
+* ``ell`` — sparse-ELL delivery backed by a Pallas kernel
+  (``repro.kernels.ell_deliver``): the step's spike ids are scalar-
+  prefetched, their padded ELL rows are gathered tile-by-tile straight from
+  HBM, and the (target, weight, slot) triples scatter-add into the ring
+  on-chip.  O(S*K) work and O(N*K) memory — the only layout that reaches
+  the paper's full scale (~0.3 billion explicit synapses).  Off-TPU the
+  strategy runs the same math through the pure-jnp gather/scatter path
+  unless ``SimConfig.use_deliver_kernel`` forces the (interpret-mode)
+  kernel.
+
+All strategies write into ``ring[D, 2, N+1]``: channel 0/1 = excitatory/
+inhibitory arrivals, one trailing dump column absorbs padded scatters.
+
+Registering a new mechanism is one class::
+
+    @register
+    class MyDelivery(DeliveryStrategy):
+        name = "mine"
+        def prepare(self, c, cfg): ...
+        def deliver(self, ring, tables, spiked, t, n_exc, cfg): ...
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple, Type
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+
+class DeliveryOverflowError(RuntimeError):
+    """Raised (``SimConfig.strict_delivery``) when spikes exceeded the
+    per-step ``spike_budget`` and were dropped by the event/ell path."""
 
 
 class EventTables(NamedTuple):
@@ -34,7 +68,19 @@ class EventTables(NamedTuple):
 
 
 class DenseTables(NamedTuple):
-    W: jnp.ndarray         # [D, N_pre, N_post] signed weights
+    """Signed delay-binned weights, in one of two layouts.
+
+    Bin-major ``W[D, N_pre, N_post]`` feeds the Pallas activity-gated
+    kernel (``use_deliver_kernel``), whose block map walks delay-bin tiles.
+    The default is source-major: ``W_ex[n_exc, D*N]`` / ``W_in[n_inh,
+    D*N]``, pre-split at the Dale boundary so delivery is two contiguous
+    rank-1 GEMMs — bitwise equal to the einsum over ``W`` but streamed at
+    memory bandwidth (the runtime row-slice ``W[:, :n_exc]`` defeated
+    XLA's fusion and cost ~10x).
+    """
+    W: Optional[jnp.ndarray] = None        # [D, N_pre, N_post] bin-major
+    W_ex: Optional[jnp.ndarray] = None     # [n_exc, D * N_post]
+    W_in: Optional[jnp.ndarray] = None     # [N - n_exc, D * N_post]
 
 
 def make_event_tables(targets, weights, dbins) -> EventTables:
@@ -80,19 +126,284 @@ def deliver_dense(ring: jnp.ndarray, tables: DenseTables,
                   matvec=None):
     """Delay-binned dense delivery. Returns (ring', overflow=0).
 
-    ``matvec(s, W)`` with ``s``[P] and ``W``[D, P, N] -> [D, N] can be swapped
-    for the Pallas activity-gated kernel; default is a jnp einsum.
+    With the source-major split layout (``W_ex``/``W_in``) the matvec is a
+    contiguous rank-1 GEMM per channel (bitwise equal to the einsum, but
+    memory-bandwidth-bound instead of batched GEMVs).  For the bin-major
+    ``W``, ``matvec(s, W)`` with ``s``[P] and ``W``[D, P, N] -> [D, N] can
+    be swapped for the Pallas activity-gated kernel; default is a jnp
+    einsum.
     """
     D, _, n_cols = ring.shape
     n = spiked.shape[0]
-    s = spiked.astype(tables.W.dtype)
-    if matvec is None:
-        matvec = lambda v, W: jnp.einsum("p,dpn->dn", v, W,
-                                         preferred_element_type=jnp.float32)
-    upd_ex = matvec(s[:n_exc], tables.W[:, :n_exc, :])   # [D, N]
-    upd_in = matvec(s[n_exc:], tables.W[:, n_exc:, :])   # [D, N]
+    if tables.W is None:
+        if matvec is not None:
+            raise ValueError(
+                "custom matvec (the gated Pallas kernel) needs the "
+                "bin-major W[D, P, N] layout, but these DenseTables hold "
+                "the split GEMM layout — rebuild the tables with "
+                "use_deliver_kernel=True (DenseDelivery.prepare)")
+        s = spiked.astype(tables.W_ex.dtype)
+        matvec = lambda v, W: jnp.matmul(
+            v[None, :], W,
+            preferred_element_type=jnp.float32).reshape(D, n)
+        upd_ex = matvec(s[:n_exc], tables.W_ex)          # [D, N]
+        upd_in = matvec(s[n_exc:], tables.W_in)          # [D, N]
+    else:
+        s = spiked.astype(tables.W.dtype)
+        if matvec is None:
+            matvec = lambda v, W: jnp.einsum(
+                "p,dpn->dn", v, W, preferred_element_type=jnp.float32)
+        upd_ex = matvec(s[:n_exc], tables.W[:, :n_exc, :])   # [D, N]
+        upd_in = matvec(s[n_exc:], tables.W[:, n_exc:, :])   # [D, N]
     upd = jnp.stack([upd_ex, upd_in], axis=1)            # [D, 2, N]
     upd = jnp.pad(upd, ((0, 0), (0, 0), (0, n_cols - n)))
     # bin d arrives at slot (t + d) mod D
     upd = jnp.roll(upd, shift=t, axis=0)
     return ring + upd.astype(ring.dtype), jnp.zeros((), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Spike-budget sizing
+# ---------------------------------------------------------------------------
+
+def auto_spike_budget(c, dt: float, safety: float = 8.0,
+                      quantum: int = 128) -> int:
+    """Rate-derived per-step spike capacity for the event/ell strategies.
+
+    Expected spikes per step at the full-scale reference rates (the
+    validation target band) times a ``safety`` headroom factor, rounded up
+    to a ``quantum`` (lane-aligned gather widths), and capped at the padded
+    network size (more than N spikes per step is impossible).
+    """
+    from repro.core.params import FULL_MEAN_RATES
+    pop_sizes = np.asarray(c.pop_sizes)
+    if pop_sizes.shape[0] == FULL_MEAN_RATES.shape[0]:
+        expected = float((pop_sizes * FULL_MEAN_RATES).sum()) * dt * 1e-3
+    else:
+        # non-microcircuit population structure: assume every neuron fires
+        # at the hottest reference rate (conservative)
+        expected = c.n_total * float(FULL_MEAN_RATES.max()) * dt * 1e-3
+    budget = max(quantum, math.ceil(expected * safety / quantum) * quantum)
+    n_cap = math.ceil(c.n_total / quantum) * quantum
+    return int(min(budget, n_cap))
+
+
+def _require_budget(cfg) -> int:
+    if cfg.spike_budget is None:
+        raise ValueError(
+            "SimConfig.spike_budget is unresolved (None means rate-derived "
+            "auto); call repro.core.engine.resolve_sim_config(cfg, "
+            "connectome) first — the api backends do this in build()")
+    return int(cfg.spike_budget)
+
+
+# ---------------------------------------------------------------------------
+# The strategy protocol and registry
+# ---------------------------------------------------------------------------
+
+class DeliveryStrategy:
+    """One spike-propagation mechanism.
+
+    Stateless: ``prepare`` builds the device-resident tables (any pytree)
+    on the host, ``deliver`` is the traced hot path that scatters one step's
+    spikes into the delay ring buffer.  Instances are singletons living in
+    :data:`REGISTRY`; the engine resolves ``SimConfig.strategy`` (a plain,
+    hashable string — jit-static) through :func:`get_strategy`.
+    """
+
+    name: str = "abstract"
+
+    # -- host side ----------------------------------------------------------
+    def prepare(self, c, cfg) -> Any:
+        """Build device tables for connectome ``c`` (returns a pytree)."""
+        raise NotImplementedError
+
+    def memory_bytes(self, c) -> int:
+        """Host-side estimate of the table footprint in bytes."""
+        raise NotImplementedError
+
+    def localize(self, c, n_dev: int, k_loc: Optional[int] = None):
+        """Shard transform for the sharded backend: regroup the tables by
+        target-owning device.  Strategies without a distributed layout
+        raise ``NotImplementedError``."""
+        raise NotImplementedError(
+            f"delivery strategy {self.name!r} has no shard transform")
+
+    @property
+    def supports_sharding(self) -> bool:
+        return False
+
+    # -- traced hot path ----------------------------------------------------
+    def deliver(self, ring: jnp.ndarray, tables: Any, spiked: jnp.ndarray,
+                t: jnp.ndarray, n_exc: int, cfg
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Scatter one step's spikes. Returns (ring', n_overflow)."""
+        raise NotImplementedError
+
+
+REGISTRY: Dict[str, DeliveryStrategy] = {}
+
+
+def register(cls: Type[DeliveryStrategy]) -> Type[DeliveryStrategy]:
+    """Class decorator: instantiate and register under ``cls.name``.
+
+    Name collisions raise — silently replacing a registered strategy would
+    change delivery semantics process-wide; ``del REGISTRY[name]`` first to
+    replace one deliberately.
+    """
+    if not getattr(cls, "name", None) or cls.name == "abstract":
+        raise ValueError(f"{cls.__name__} needs a concrete .name")
+    if cls.name in REGISTRY:
+        raise ValueError(
+            f"delivery strategy {cls.name!r} is already registered "
+            f"({type(REGISTRY[cls.name]).__name__}); del REGISTRY[name] "
+            f"first to replace it")
+    REGISTRY[cls.name] = cls()
+    return cls
+
+
+def get_strategy(name: str) -> DeliveryStrategy:
+    """Resolve a registered strategy by name (the ``SimConfig.strategy``
+    string); raises with the available names on a miss."""
+    if isinstance(name, DeliveryStrategy):
+        return name
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown delivery strategy {name!r}; "
+                         f"available: {available_strategies()}") from None
+
+
+def available_strategies() -> Tuple[str, ...]:
+    return tuple(sorted(REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# Registered implementations
+# ---------------------------------------------------------------------------
+
+@register
+class EventDelivery(DeliveryStrategy):
+    """Budgeted event-driven gather + one large XLA scatter-add."""
+
+    name = "event"
+
+    def prepare(self, c, cfg) -> EventTables:
+        return make_event_tables(
+            jnp.asarray(c.targets), jnp.asarray(c.weights),
+            jnp.asarray(c.dbins))
+
+    def memory_bytes(self, c) -> int:
+        n, k = c.targets.shape
+        return (n + 1) * k * (4 + 4 + 4)
+
+    def localize(self, c, n_dev, k_loc=None):
+        from repro.core.distributed import localize_ell
+        return localize_ell(c, n_dev, k_loc)
+
+    @property
+    def supports_sharding(self) -> bool:
+        return True
+
+    def deliver(self, ring, tables, spiked, t, n_exc, cfg):
+        return deliver_event(ring, tables, spiked, t, n_exc,
+                             _require_budget(cfg))
+
+
+@register
+class DenseDelivery(DeliveryStrategy):
+    """Delay-binned matrix delivery on the MXU (O(N^2) memory — guarded)."""
+
+    name = "dense"
+
+    def prepare(self, c, cfg, dtype=jnp.float32) -> DenseTables:
+        from repro.core.connectivity import dense_delay_binned
+        W = dense_delay_binned(c)                     # [D, N, N]
+        if cfg.use_deliver_kernel:
+            # the gated Pallas kernel's block map walks delay-bin tiles
+            return DenseTables(W=jnp.asarray(W, dtype=dtype))
+        # source-major split GEMM layout (see DenseTables); intermediates
+        # are freed eagerly so the host peak stays ~2x the table estimate
+        Wt = np.ascontiguousarray(W.transpose(1, 0, 2)).reshape(
+            c.n_total, -1)
+        del W
+        W_ex = jnp.asarray(Wt[:c.n_exc], dtype=dtype)
+        W_in = jnp.asarray(Wt[c.n_exc:], dtype=dtype)
+        del Wt
+        return DenseTables(W_ex=W_ex, W_in=W_in)
+
+    def memory_bytes(self, c, itemsize: int = 4) -> int:
+        return c.d_max_bins * c.n_total * c.n_total * itemsize
+
+    def deliver(self, ring, tables, spiked, t, n_exc, cfg):
+        matvec = None
+        if cfg.use_deliver_kernel:
+            from repro.kernels import ops as kops
+            matvec = kops.gated_spike_matvec
+        return deliver_dense(ring, tables, spiked, t, n_exc, matvec=matvec)
+
+
+@register
+class EllDelivery(DeliveryStrategy):
+    """Sparse-ELL delivery backed by the Pallas ``ell_deliver`` kernel.
+
+    Same ELL tables as ``event`` (rows padded to a lane-aligned K so the
+    kernel's tile loop divides evenly).  On TPU — or when
+    ``cfg.use_deliver_kernel`` asks for it — the kernel scalar-prefetches
+    the spike ids, gathers only the S spiking rows tile-by-tile from HBM
+    and scatter-adds on-chip; elsewhere the identical math runs through the
+    pure-jnp gather/scatter (interpret-mode kernels are tracing-bound on
+    CPU, the repo-wide convention is opt-in via ``use_deliver_kernel``).
+    """
+
+    name = "ell"
+    block_k = 128            # ELL row tile width (lane-aligned)
+    #: The kernel holds the whole [2D, N+1] ring update as one VMEM-resident
+    #: output block; past this budget (full scale needs ~28 MB vs ~16 MB
+    #: VMEM) the automatic TPU path falls back to the XLA gather/scatter
+    #: until the column-tiled kernel variant lands.  An explicit
+    #: ``use_deliver_kernel=True`` still forces the kernel.
+    kernel_max_ring_bytes = 12 * 1024 ** 2
+
+    def prepare(self, c, cfg) -> EventTables:
+        targets = np.asarray(c.targets)
+        weights = np.asarray(c.weights)
+        dbins = np.asarray(c.dbins)
+        n, k = targets.shape
+        k_pad = max(self.block_k,
+                    -(-k // self.block_k) * self.block_k)
+        if k_pad != k:
+            pad = ((0, 0), (0, k_pad - k))
+            targets = np.pad(targets, pad, constant_values=n)
+            weights = np.pad(weights, pad)
+            dbins = np.pad(dbins, pad, constant_values=1)
+        return make_event_tables(
+            jnp.asarray(targets), jnp.asarray(weights), jnp.asarray(dbins))
+
+    def memory_bytes(self, c) -> int:
+        n, k = c.targets.shape
+        k_pad = max(self.block_k, -(-k // self.block_k) * self.block_k)
+        return (n + 1) * k_pad * (4 + 4 + 4)
+
+    def localize(self, c, n_dev, k_loc=None):
+        # The sharded engine consumes the same ELL layout (its deliver is
+        # the event-style scatter over localized columns).
+        from repro.core.distributed import localize_ell
+        return localize_ell(c, n_dev, k_loc)
+
+    @property
+    def supports_sharding(self) -> bool:
+        return True
+
+    def deliver(self, ring, tables, spiked, t, n_exc, cfg):
+        budget = _require_budget(cfg)
+        D, _, n_cols = ring.shape
+        upd_bytes = 2 * D * (-(-n_cols // 128) * 128) * 4
+        use_kernel = (cfg.use_deliver_kernel
+                      or (jax.default_backend() == "tpu"
+                          and upd_bytes <= self.kernel_max_ring_bytes))
+        if use_kernel:
+            from repro.kernels import ops as kops
+            return kops.ell_deliver(ring, tables, spiked, t, n_exc, budget,
+                                    block_k=self.block_k)
+        return deliver_event(ring, tables, spiked, t, n_exc, budget)

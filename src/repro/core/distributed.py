@@ -41,7 +41,13 @@ class ShardedTables(NamedTuple):
 
 def localize_ell(c: Connectome, n_dev: int,
                  k_loc: Optional[int] = None) -> Tuple[ShardedTables, dict]:
-    """Regroup the ELL table by target-owning device (host-side numpy)."""
+    """Regroup the ELL table by target-owning device (host-side numpy).
+
+    This is the shard transform of the ELL-layout delivery strategies:
+    the sharded backend reaches it through
+    ``repro.core.delivery.DeliveryStrategy.localize`` (``event`` and
+    ``ell`` register it; strategies without a distributed layout raise).
+    """
     n = c.n_total
     n_pad = -(-n // n_dev) * n_dev
     n_loc = n_pad // n_dev

@@ -4,8 +4,10 @@ Mirrors the phase structure the paper instruments (Fig. 1b):
 
 * ``update``      — exact-integration LIF step + Poisson external drive
                     (optionally the fused Pallas ``lif_update`` kernel),
-* ``deliver``     — spike propagation into the delay ring buffer
-                    (strategy ``event`` or ``dense``),
+* ``deliver``     — spike propagation into the delay ring buffer, dispatched
+                    through the :mod:`repro.core.delivery` strategy registry
+                    (``event`` | ``dense`` | ``ell`` out of the box;
+                    ``SimConfig.strategy`` names the registered strategy),
 * ``communicate`` — in the sharded engine, the all-gather of the spike
                     registry (see ``repro.launch.dryrun`` / ``sharded_step``);
                     a no-op on a single device.
@@ -26,14 +28,14 @@ from __future__ import annotations
 import dataclasses
 import functools
 import warnings
-from typing import Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import delivery as dlv
-from repro.core.connectivity import Connectome, dense_delay_binned
+from repro.core.connectivity import Connectome
 from repro.core.neuron import NeuronParams, NeuronState, Propagators, lif_step
 from repro.core.params import InputParams
 
@@ -41,24 +43,59 @@ from repro.core.params import InputParams
 @dataclasses.dataclass(frozen=True)
 class SimConfig:
     dt: float = 0.1
-    strategy: str = "event"            # "event" | "dense"
-    spike_budget: int = 512            # max spikes delivered per step (event)
+    strategy: str = "event"            # a repro.core.delivery registry name:
+                                       # "event" | "dense" | "ell" | custom
+    spike_budget: Optional[int] = None # max spikes delivered per step
+                                       # (event/ell); None -> rate-derived
+                                       # auto via resolve_sim_config
+    strict_delivery: bool = False      # raise DeliveryOverflowError instead
+                                       # of warning when spikes were dropped
     record: str = "pop_counts"         # "spikes" | "pop_counts" | "none"
     use_lif_kernel: bool = False       # Pallas fused update (interpret on CPU)
-    use_deliver_kernel: bool = False   # Pallas gated dense delivery
+    use_deliver_kernel: bool = False   # Pallas delivery kernels (gated dense
+                                       # matvec / sparse-ELL); interpret-mode
+                                       # off TPU
     bg_rate: float = 8.0               # Hz per external synapse
     state_dtype: type = jnp.float32    # V / currents / ring precision
 
 
+def resolve_sim_config(cfg: SimConfig, c: Connectome) -> SimConfig:
+    """Fill connectome-dependent defaults: validates the strategy name and
+    derives ``spike_budget`` from the expected firing rates when unset.
+    The api backends call this in ``build``; direct ``deliver_phase`` users
+    must resolve before tracing."""
+    dlv.get_strategy(cfg.strategy)
+    if cfg.spike_budget is None:
+        cfg = dataclasses.replace(
+            cfg, spike_budget=dlv.auto_spike_budget(c, cfg.dt))
+    return cfg
+
+
 class Network(NamedTuple):
-    """Device-resident network tables (pytree)."""
-    event: Optional[dlv.EventTables]
-    dense: Optional[dlv.DenseTables]
+    """Device-resident network tables (pytree).
+
+    ``tables`` is whatever the selected delivery strategy's ``prepare``
+    returned (EventTables for event/ell, DenseTables for dense, any pytree
+    for custom registrations).
+    """
+    tables: Any
     k_ext: jnp.ndarray      # [N]
     i_dc: jnp.ndarray       # [N]
     pop_of: jnp.ndarray     # [N] int32
     v0_mean: jnp.ndarray
     v0_sd: jnp.ndarray
+
+    @property
+    def event(self) -> Optional[dlv.EventTables]:
+        """Deprecated accessor kept for pre-registry callers."""
+        t = self.tables
+        return t if isinstance(t, dlv.EventTables) else None
+
+    @property
+    def dense(self) -> Optional[dlv.DenseTables]:
+        """Deprecated accessor kept for pre-registry callers."""
+        t = self.tables
+        return t if isinstance(t, dlv.DenseTables) else None
 
 
 class SimState(NamedTuple):
@@ -71,20 +108,22 @@ class SimState(NamedTuple):
 
 def prepare_network(c: Connectome, cfg: SimConfig,
                     dense_dtype=jnp.float32) -> Network:
-    event = None
-    dense = None
-    if cfg.strategy == "event":
-        event = dlv.make_event_tables(
-            jnp.asarray(c.targets), jnp.asarray(c.weights),
-            jnp.asarray(c.dbins))
-    elif cfg.strategy == "dense":
-        W = dense_delay_binned(c)
-        dense = dlv.DenseTables(W=jnp.asarray(W, dtype=dense_dtype))
+    """Build the device tables of the registered delivery strategy named by
+    ``cfg.strategy`` (raises with the available names on a miss).
+
+    Every strategy is called through the uniform ``prepare(c, cfg)``
+    protocol; ``dense_dtype`` is honoured only for the stock dense
+    strategy's weight tensor (and only when non-default — custom
+    registrations are never forced to accept extra keywords).
+    """
+    strategy = dlv.get_strategy(cfg.strategy)
+    if (dense_dtype is not jnp.float32
+            and type(strategy) is dlv.DenseDelivery):
+        tables = strategy.prepare(c, cfg, dtype=dense_dtype)
     else:
-        raise ValueError(f"unknown strategy {cfg.strategy!r}")
+        tables = strategy.prepare(c, cfg)
     return Network(
-        event=event,
-        dense=dense,
+        tables=tables,
         k_ext=jnp.asarray(c.k_ext),
         i_dc=jnp.asarray(c.i_dc),
         pop_of=jnp.asarray(c.pop_of),
@@ -157,16 +196,15 @@ def update_phase(state: SimState, net: Network, prop: Propagators,
 
 def deliver_phase(state: SimState, net: Network, cfg: SimConfig,
                   spiked: jnp.ndarray, n_exc: int):
-    if cfg.strategy == "event":
-        ring, ovf = dlv.deliver_event(
-            state.ring, net.event, spiked, state.t, n_exc, cfg.spike_budget)
-    else:
-        matvec = None
-        if cfg.use_deliver_kernel:
-            from repro.kernels import ops as kops
-            matvec = kops.gated_spike_matvec
-        ring, ovf = dlv.deliver_dense(
-            state.ring, net.dense, spiked, state.t, n_exc, matvec=matvec)
+    """Dispatch one step's spikes through the registered delivery strategy.
+
+    ``cfg.strategy`` is a plain string (jit-static), resolved against the
+    :data:`repro.core.delivery.REGISTRY` at trace time; the strategy's
+    ``deliver`` scatters into the ring and reports budget overflow.
+    """
+    strategy = dlv.get_strategy(cfg.strategy)
+    ring, ovf = strategy.deliver(state.ring, net.tables, spiked, state.t,
+                                 n_exc, cfg)
     return SimState(state.neuron, ring, state.t + 1, state.key,
                     state.overflow + ovf)
 
@@ -226,6 +264,7 @@ def simulate(c: Connectome, t_sim_ms: float, cfg: SimConfig,
         "repro.core.engine.simulate is deprecated; use repro.api.Simulator",
         DeprecationWarning, stacklevel=2)
     neuron = neuron or NeuronParams()
+    cfg = resolve_sim_config(cfg, c)
     prop = Propagators.make(neuron, cfg.dt)
     if net is None:
         net = prepare_network(c, cfg)

@@ -169,10 +169,11 @@ def simulate_plastic(c: Connectome, t_sim_ms: float, sim_cfg, stdp_cfg,
 
     from repro.core import delivery as dlv
     from repro.core.engine import (SimState, init_state, prepare_network,
-                                   update_phase)
+                                   resolve_sim_config, update_phase)
     from repro.core.neuron import NeuronParams, Propagators
 
     assert sim_cfg.strategy == "event"
+    sim_cfg = resolve_sim_config(sim_cfg, c)    # auto spike budget
     # down-scaled nets carry 1/sqrt(K_scaling)-boosted weights: scale the
     # STDP reference (and thus w_max / amplitudes) to match
     stdp_cfg = dataclasses.replace(

@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: sparse-ELL spike delivery (the ``ell`` strategy).
+
+Event delivery is a gather of S spiking rows from the padded ELL
+out-adjacency ``[N+1, K]`` followed by a scatter-add of the ``S x K``
+(target, weight, delay-bin) triples into the ring buffer.  The XLA lowering
+of that pattern materialises the ``[S, K]`` gathered rows in HBM and runs
+the scatter as a second pass; this kernel fuses both (DESIGN.md section 2):
+
+* the step's spike ids are **scalar-prefetched** (SMEM), so the ``BlockSpec``
+  index map of the three ELL tables reads ``ids[s]`` and the pipeline
+  fetches *only the S spiking rows*, tile-by-tile (``block_k`` lanes per
+  tile) — O(S*K) HBM traffic instead of O(N*K),
+* each gathered tile's triples are **scatter-added on-chip** into the ring
+  update held in VMEM (rows ``slot*2 + channel``, columns = target ids);
+  padded entries land in the trailing dump column with weight 0.
+
+The ring update accumulates across the whole grid in one VMEM-resident
+output block (constant index map), so HBM sees exactly one write of
+``[2D, N+1]`` per step.  Work is O(S*K), memory O(N*K) — the ELL layout
+is what reaches the paper's full scale (N=77k, ~0.3e9 synapses).  The
+single-block ring update, however, caps this kernel at
+``2*D*(N+1)*4 <~ 12 MB`` of VMEM (N ~ 16k at D=46); past that the ``ell``
+strategy's automatic TPU path falls back to the XLA gather/scatter
+(``EllDelivery.kernel_max_ring_bytes``) until a column-tiled variant
+lands.
+
+The scatter loop is scalar (VPU/SMEM-bound); the HBM saving of the gated
+row gather is what the strategy is for.  A follow-up can batch the scatter
+as a one-hot ``[2D, block_k] @ [block_k, n_tile]`` MXU product per tile.
+
+Grid: ``(S, K/block_k)`` — spikes outer, row tiles inner, so the scatter
+order (s-major, k-minor) matches the XLA scatter of ``deliver_event`` and
+results agree bitwise.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, meta_ref, tgt_ref, w_ref, db_ref, out_ref, *,
+            d_bins: int, block_k: int):
+    s = pl.program_id(0)
+    kb = pl.program_id(1)
+
+    @pl.when((s == 0) & (kb == 0))
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    t = meta_ref[0]
+    n_exc = meta_ref[1]
+    sid = ids_ref[s]
+    # Dale's law: the source row sets the sign channel.  The sentinel row
+    # (sid == N >= n_exc) carries weight 0 into the dump column.
+    ch = jnp.where(sid >= n_exc, 1, 0).astype(jnp.int32)
+
+    def body(j, _):
+        tg = tgt_ref[0, j]
+        w = w_ref[0, j]
+        db = db_ref[0, j]
+        slot = jax.lax.rem(t + db, d_bins)
+        row = slot * 2 + ch
+        out_ref[row, tg] += w
+        return 0
+
+    jax.lax.fori_loop(0, block_k, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("d_bins", "n_cols", "block_k",
+                                             "n_exc", "interpret"))
+def ell_deliver_pallas(ids: jnp.ndarray, targets: jnp.ndarray,
+                       weights: jnp.ndarray, dbins: jnp.ndarray,
+                       t: jnp.ndarray, *, d_bins: int, n_cols: int,
+                       n_exc: int, block_k: int = 128,
+                       interpret: bool = False) -> jnp.ndarray:
+    """Ring update from S spike ids through ELL tables.
+
+    ``ids``[S] int32 in [0, N] (N = sentinel row), tables ``[N+1, K]``.
+    Returns ``upd[d_bins, 2, n_cols]`` f32 to be added onto the ring.
+    """
+    s_budget = ids.shape[0]
+    k = targets.shape[1]
+    k_pad = -(-k // block_k) * block_k
+    if k_pad != k:              # EllDelivery.prepare pre-pads; stay robust
+        n_sent = targets.shape[0] - 1
+        targets = jnp.pad(targets, ((0, 0), (0, k_pad - k)),
+                          constant_values=n_sent)
+        weights = jnp.pad(weights, ((0, 0), (0, k_pad - k)))
+        dbins = jnp.pad(dbins, ((0, 0), (0, k_pad - k)),
+                        constant_values=1)
+    n_cols_pad = -(-n_cols // 128) * 128
+    meta = jnp.stack([jnp.asarray(t, jnp.int32),
+                      jnp.full((), n_exc, jnp.int32)])
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(s_budget, k_pad // block_k),
+        in_specs=[
+            pl.BlockSpec((1, block_k), lambda s, kb, ids, meta: (ids[s], kb)),
+            pl.BlockSpec((1, block_k), lambda s, kb, ids, meta: (ids[s], kb)),
+            pl.BlockSpec((1, block_k), lambda s, kb, ids, meta: (ids[s], kb)),
+        ],
+        out_specs=pl.BlockSpec((2 * d_bins, n_cols_pad),
+                               lambda s, kb, ids, meta: (0, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, d_bins=d_bins, block_k=block_k),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((2 * d_bins, n_cols_pad),
+                                       jnp.float32),
+        interpret=interpret,
+    )(ids, meta, targets, weights, dbins)
+    return out.reshape(d_bins, 2, n_cols_pad)[:, :, :n_cols]

@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.neuron import NeuronState, Propagators
+from repro.kernels.ell_deliver import ell_deliver_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.lif_update import lif_update_pallas
 from repro.kernels.spike_deliver import gated_spike_matvec_pallas
@@ -36,6 +37,26 @@ def gated_spike_matvec(s: jnp.ndarray, W: jnp.ndarray,
     """Activity-gated dense delivery. Drop-in matvec for deliver_dense."""
     interpret = _interpret_default() if interpret is None else interpret
     return gated_spike_matvec_pallas(s, W, interpret=interpret)
+
+
+def ell_deliver(ring: jnp.ndarray, tables, spiked: jnp.ndarray,
+                t: jnp.ndarray, n_exc: int, spike_budget: int,
+                block_k: int = 128, interpret: bool | None = None):
+    """Sparse-ELL ring delivery (the ``ell`` strategy's kernel path).
+
+    Drop-in for ``delivery.deliver_event``: returns (ring', n_overflow).
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    D, _, n_cols = ring.shape
+    n = spiked.shape[0]
+    n_spikes = jnp.sum(spiked, dtype=jnp.int32)
+    (ids,) = jnp.nonzero(spiked, size=spike_budget, fill_value=n)
+    upd = ell_deliver_pallas(
+        ids.astype(jnp.int32), tables.targets, tables.weights, tables.dbins,
+        t, d_bins=D, n_cols=n_cols, n_exc=n_exc, block_k=block_k,
+        interpret=interpret)
+    overflow = jnp.maximum(n_spikes - spike_budget, 0)
+    return ring + upd.astype(ring.dtype), overflow
 
 
 def flash_attention(q, k, v, *, causal: bool = True, scale=None,

@@ -24,6 +24,13 @@ def gated_spike_matvec_ref(s: jnp.ndarray, W: jnp.ndarray) -> jnp.ndarray:
                       preferred_element_type=jnp.float32)
 
 
+def ell_deliver_ref(ring: jnp.ndarray, tables, spiked: jnp.ndarray,
+                    t: jnp.ndarray, n_exc: int, spike_budget: int):
+    """Oracle for kernels.ell_deliver — the event gather/scatter itself."""
+    from repro.core.delivery import deliver_event
+    return deliver_event(ring, tables, spiked, t, n_exc, spike_budget)
+
+
 def mha_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
             causal: bool = True, scale: float | None = None) -> jnp.ndarray:
     """Oracle for kernels.flash_attention.

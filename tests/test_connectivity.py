@@ -95,5 +95,62 @@ def test_dc_compensation_zero_at_full_scale():
     assert np.allclose(c.i_dc, 0.0)
 
 
+# ---------------------------------------------------------------------------
+# The scale= knob (NEST-style down-scaling: n & k together + DC comp)
+# ---------------------------------------------------------------------------
+
+def test_scale_sets_population_sizes():
+    c = build_connectome(scale=0.1, seed=2)
+    np.testing.assert_array_equal(c.pop_sizes, P.scaled_counts(0.1))
+    assert c.n_exc == int(np.sum(c.pop_sizes[:P.N_EXC_POPS]))
+
+
+def test_scale_preserves_relative_indegrees():
+    """In-degree statistics scale by k: mean in-degree at scale s is ~s times
+    the full-scale per-population in-degree."""
+    s = 0.1
+    c = build_connectome(scale=s, seed=2)
+    n_full = np.array([P.N_FULL[p] for p in P.POPULATIONS])
+    k_full = P.synapse_numbers(n_full, P.CONN_PROBS, n_full, 1.0)
+    ind_full = (k_full / n_full[:, None]).sum(axis=1)    # per target neuron
+    valid = c.targets < c.n_total
+    tgt = c.targets[valid]
+    indeg = np.bincount(c.pop_of[tgt], minlength=8) / c.pop_sizes
+    np.testing.assert_allclose(indeg, s * ind_full, rtol=0.03)
+
+
+def test_scale_equivalent_to_explicit_scalings():
+    a = build_connectome(scale=0.02, seed=7)
+    b = build_connectome(n_scaling=0.02, k_scaling=0.02, seed=7)
+    assert a.n_total == b.n_total and a.n_synapses == b.n_synapses
+    np.testing.assert_array_equal(a.targets, b.targets)
+    np.testing.assert_allclose(a.i_dc, b.i_dc)
+    assert a.w_ext == b.w_ext
+
+
+def test_scale_dc_compensation_tracks_scale():
+    """Down-scaling compensates lost mean input: DC grows as scale drops and
+    vanishes at scale 1 geometry (k_scaling=1)."""
+    c_small = build_connectome(scale=0.02, seed=3)
+    c_mid = build_connectome(scale=0.1, seed=3)
+    assert (c_small.i_dc > 0).all() and (c_mid.i_dc > 0).all()
+    # one value per population (i_dc is per-neuron, N differs across scales)
+    dc_small = c_small.i_dc[c_small.pop_offsets[:-1]]
+    dc_mid = c_mid.i_dc[c_mid.pop_offsets[:-1]]
+    assert (dc_small > dc_mid).all()
+    # the van-Albada formula: i_dc ~ (1 - sqrt(k_scaling))
+    want = (1 - np.sqrt(0.02)) / (1 - np.sqrt(0.1))
+    np.testing.assert_allclose(dc_small / dc_mid, want, rtol=1e-5)
+
+
+def test_scale_conflicts_and_bounds_raise():
+    with pytest.raises(ValueError, match="not both"):
+        build_connectome(scale=0.5, n_scaling=0.2)
+    with pytest.raises(ValueError, match="scale"):
+        build_connectome(scale=0.0)
+    with pytest.raises(ValueError, match="scale"):
+        build_connectome(scale=1.5)
+
+
 def test_dc_compensation_positive_when_downscaled(small_connectome):
     assert (small_connectome.i_dc > 0).all()
