@@ -1,5 +1,22 @@
-"""Shared benchmark helpers (driven through the ``Simulator`` session API)."""
+"""Shared benchmark helpers: timed runs + the schema-versioned RTF ledger.
+
+A *ledger* is the persisted half of the paper's headline measurement: a
+JSON file of RTF entries (strategy x scale, with machine/topology
+metadata) that future runs compare against, so performance regressions
+are flagged by CI instead of discovered by re-reading old logs.  The
+committed ``BENCH_rtf.json`` at the repo root is the reference trajectory;
+``benchmarks/table1_rtf.py --sweep`` regenerates it and ``--compare``
+exits non-zero when a measured entry regresses past the tolerance.
+"""
 from __future__ import annotations
+
+import json
+import os
+import platform
+import time
+from typing import Dict, List, Optional
+
+BENCH_SCHEMA = "repro.bench_rtf/v1"
 
 
 def time_sim(sim, t_model_ms: float, presim_ms: float = 0.0):
@@ -16,3 +33,105 @@ def time_sim(sim, t_model_ms: float, presim_ms: float = 0.0):
 
 def fmt_row(name: str, us: float, derived: str) -> str:
     return f"{name},{us:.1f},{derived}"
+
+
+# ---------------------------------------------------------------------------
+# Ledger
+# ---------------------------------------------------------------------------
+
+def machine_metadata() -> Dict:
+    """Host/topology context an RTF number is meaningless without."""
+    import jax
+    devs = jax.devices()
+    return {
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": devs[0].device_kind if devs else "none",
+        "n_devices": len(devs),
+        "cpu_count": os.cpu_count(),
+    }
+
+
+def make_entry(name: str, *, strategy: str, scale: float, result,
+               connectome) -> Dict:
+    """One ledger row from a ``RunResult`` (see ``time_sim``)."""
+    return {
+        "name": name,
+        "strategy": strategy,
+        "scale": scale,
+        "rtf": result.rtf,
+        "wall_s": result.wall_s,
+        "t_model_ms": result.t_model_ms,
+        "n_steps": result.n_steps,
+        "n_neurons": int(connectome.n_total),
+        "n_synapses": int(connectome.n_synapses),
+        "overflow": int(result.overflow),
+    }
+
+
+def write_ledger(path: str, entries: List[Dict],
+                 meta: Optional[Dict] = None) -> Dict:
+    """Persist a schema-versioned ledger; returns the written document."""
+    doc = {
+        "schema": BENCH_SCHEMA,
+        "created_unix": time.time(),
+        "machine": machine_metadata(),
+        "entries": list(entries),
+    }
+    if meta:
+        doc["meta"] = dict(meta)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    return doc
+
+
+def load_ledger(path: str) -> Dict:
+    with open(path) as f:
+        doc = json.load(f)
+    schema = doc.get("schema")
+    if schema != BENCH_SCHEMA:
+        raise ValueError(
+            f"{path}: unknown ledger schema {schema!r} "
+            f"(expected {BENCH_SCHEMA!r}); regenerate with "
+            f"benchmarks/table1_rtf.py --sweep --out {path}")
+    return doc
+
+
+def compare_ledgers(baseline: Dict, current: Dict,
+                    rtol: float = 0.5) -> List[Dict]:
+    """Flag entries whose RTF regressed past ``baseline * (1 + rtol)``.
+
+    Entries are matched by ``name`` (which encodes strategy x scale);
+    entries present on only one side are ignored — adding or dropping a
+    sweep point is not a regression.  The default tolerance is deliberately
+    loose: RTF on shared CI runners is noisy, and the ledger is meant to
+    catch step-function regressions (an accidentally-interpreted kernel, a
+    lost fusion), not percent-level drift.  Cross-machine comparisons are
+    flagged in the returned records (``machine_differs``) so callers can
+    soften them.
+    """
+    base = {e["name"]: e for e in baseline.get("entries", [])}
+    machine_differs = (baseline.get("machine", {}).get("device_kind"),
+                       baseline.get("machine", {}).get("backend")) != \
+                      (current.get("machine", {}).get("device_kind"),
+                       current.get("machine", {}).get("backend"))
+    regressions = []
+    for entry in current.get("entries", []):
+        ref = base.get(entry["name"])
+        if ref is None or ref.get("rtf") is None:
+            continue
+        limit = ref["rtf"] * (1.0 + rtol)
+        if entry["rtf"] > limit:
+            regressions.append({
+                "name": entry["name"],
+                "baseline_rtf": ref["rtf"],
+                "current_rtf": entry["rtf"],
+                "limit": limit,
+                "ratio": entry["rtf"] / ref["rtf"],
+                "machine_differs": machine_differs,
+            })
+    return regressions

@@ -1,20 +1,36 @@
-"""Table I analogue: RTF and energy/synaptic event across systems.
+"""Table I analogue + the persisted RTF benchmark ledger.
 
-Prints the paper's literature table plus this framework's rows:
-  * measured CPU RTF (down-scaled, with the synapse count for context),
-  * roofline-projected full-scale RTF on TPU v5e (1 chip / 256 / 512),
-  * projected energy per synaptic event on v5e.
+Default mode prints the paper's literature table plus this framework's
+rows (measured CPU RTF at a down-scale; roofline-projected full-scale RTF
+and energy/synaptic event on TPU v5e).
 
-Energy model: TDP ~200 W/chip wall power (v5e), E = P x chips x T_wall;
-synaptic events = N_syn x mean_rate x T_model (the paper's definition).
+Ledger modes turn the measurement into a regression gate:
+
+    # measure the strategy x scale sweep, persist the ledger
+    python benchmarks/table1_rtf.py --sweep --out artifacts/bench/BENCH_rtf.json
+
+    # ... and flag regressions against the committed reference ledger
+    python benchmarks/table1_rtf.py --sweep --compare BENCH_rtf.json
+
+    # compare two existing ledgers without re-measuring
+    python benchmarks/table1_rtf.py --replay artifacts/bench/BENCH_rtf.json \
+        --compare BENCH_rtf.json
+
+``--compare`` exits with status 3 when any matched entry's RTF exceeds
+``baseline * (1 + rtol)`` — the exit code CI (and the tier-2 test) keys
+off.  Energy model: TDP ~200 W/chip wall power (v5e), E = P x chips x
+T_wall; synaptic events = N_syn x mean_rate x T_model (paper definition).
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
+import sys
 
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import fmt_row, time_sim
 from repro.api import Simulator
 from repro.configs.microcircuit import MicrocircuitConfig
@@ -78,7 +94,7 @@ def single_chip_projection():
     return rtf, e * 1e6
 
 
-def main():
+def print_table():
     rows = []
     for name, rtf, e in LITERATURE:
         rows.append(fmt_row(f"table1/{name.replace(' ', '_')}", rtf * 1e6,
@@ -104,5 +120,99 @@ def main():
         print(r)
 
 
+def run_sweep(scales, strategies, t_sim_ms: float, seed: int = 3):
+    """Measure RTF for every strategy x scale cell; returns ledger entries.
+
+    The connectome is built once per scale and shared across strategies so
+    the sweep measures delivery mechanisms, not instantiation noise.
+    """
+    from repro.core.connectivity import build_connectome
+    entries = []
+    for scale in scales:
+        c = build_connectome(scale=scale, seed=seed)
+        for strategy in strategies:
+            name = f"rtf/{strategy}/scale{scale:g}"
+            cfg = MicrocircuitConfig(scale=scale, strategy=strategy,
+                                     seed=seed, t_presim=0.0)
+            sim = Simulator(cfg, connectome=c)
+            res = time_sim(sim, t_sim_ms)
+            entry = common.make_entry(name, strategy=strategy, scale=scale,
+                                      result=res, connectome=c)
+            entries.append(entry)
+            print(fmt_row(name, res.rtf * 1e6,
+                          f"rtf={res.rtf:.3f};wall_s={res.wall_s:.2f}"))
+    return entries
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--sweep", action="store_true",
+                    help="measure the strategy x scale RTF sweep")
+    ap.add_argument("--scales", default="0.02,0.05",
+                    help="comma-separated scales for --sweep")
+    ap.add_argument("--strategies", default="event,ell",
+                    help="comma-separated delivery strategies for --sweep")
+    ap.add_argument("--t-sim", type=float, default=200.0,
+                    help="model time per sweep cell (ms)")
+    ap.add_argument("--seed", type=int, default=3)
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="write the measured sweep as a ledger JSON")
+    ap.add_argument("--replay", default=None, metavar="PATH",
+                    help="take entries from an existing ledger instead of "
+                         "measuring (compare-only mode)")
+    ap.add_argument("--compare", default=None, metavar="PATH", nargs="?",
+                    const="BENCH_rtf.json",
+                    help="baseline ledger to compare against (default: "
+                         "the committed BENCH_rtf.json); exit 3 on "
+                         "regression")
+    ap.add_argument("--rtol", type=float, default=0.5,
+                    help="allowed relative RTF slowdown before a compare "
+                         "regression fires (default 0.5 = 50%%)")
+    args = ap.parse_args(argv)
+
+    if not (args.sweep or args.replay or args.compare):
+        print_table()
+        return 0
+
+    if args.replay is not None:
+        current = common.load_ledger(args.replay)
+    else:
+        scales = [float(s) for s in args.scales.split(",") if s]
+        strategies = [s for s in args.strategies.split(",") if s]
+        entries = run_sweep(scales, strategies, args.t_sim, seed=args.seed)
+        meta = {"t_sim_ms": args.t_sim, "seed": args.seed}
+        if args.out:
+            current = common.write_ledger(args.out, entries, meta=meta)
+            print(f"ledger written: {args.out} ({len(entries)} entries)")
+        else:
+            current = {"schema": common.BENCH_SCHEMA,
+                       "machine": common.machine_metadata(),
+                       "entries": entries, "meta": meta}
+
+    if args.compare is not None:
+        base_path = args.compare
+        if not os.path.exists(base_path):
+            print(f"--compare: baseline ledger {base_path!r} not found",
+                  file=sys.stderr)
+            return 2
+        baseline = common.load_ledger(base_path)
+        regressions = common.compare_ledgers(baseline, current,
+                                             rtol=args.rtol)
+        matched = {e["name"] for e in current.get("entries", [])} \
+            & {e["name"] for e in baseline.get("entries", [])}
+        print(f"compare vs {base_path}: {len(matched)} matched entries, "
+              f"{len(regressions)} regression(s) at rtol={args.rtol}")
+        for r in regressions:
+            note = " [baseline from different machine]" \
+                if r["machine_differs"] else ""
+            print(f"  REGRESSION {r['name']}: rtf "
+                  f"{r['baseline_rtf']:.3f} -> {r['current_rtf']:.3f} "
+                  f"({r['ratio']:.2f}x, limit {r['limit']:.3f}){note}",
+                  file=sys.stderr)
+        if regressions:
+            return 3
+    return 0
+
+
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -38,6 +38,14 @@ def main():
                          "bit-exact)")
     ap.add_argument("--stdp", action="store_true",
                     help="compose E->E pair STDP into the loop")
+    ap.add_argument("--validate", action="store_true",
+                    help="stream spike statistics (CV-ISI, pairwise "
+                         "correlation) during the run and judge them "
+                         "against the published microcircuit bands")
+    ap.add_argument("--validate-json", default=None, metavar="PATH",
+                    help="write the ValidationReport JSON here")
+    ap.add_argument("--sample-per-pop", type=int, default=100,
+                    help="neurons sampled per population for --validate")
     ap.add_argument("--seed", type=int, default=55)
     args = ap.parse_args()
 
@@ -45,8 +53,22 @@ def main():
         n_scaling=args.scale, k_scaling=args.scale, t_sim=args.t_sim,
         t_presim=args.t_presim, strategy=args.strategy, seed=args.seed)
 
+    probes = ["pop_counts"]
+    if args.validate or args.validate_json:
+        from repro import validate as V
+        from repro.api import spike_stats
+        from repro.core.connectivity import build_connectome
+        c = build_connectome(n_scaling=args.scale, k_scaling=args.scale,
+                             seed=args.seed, dt=cfg.dt)
+        ids = V.sample_ids(c.pop_sizes, per_pop=args.sample_per_pop,
+                           seed=args.seed)
+        probes.append(spike_stats(ids, bin_steps=int(round(2.0 / cfg.dt))))
+    else:
+        c = None
+
     t0 = time.perf_counter()
-    sim = Simulator(cfg, backend=args.backend, stdp=args.stdp or None,
+    sim = Simulator(cfg, connectome=c, backend=args.backend,
+                    stdp=args.stdp or None, probes=probes,
                     use_lif_kernel=args.use_kernels,
                     use_deliver_kernel=args.use_kernels)
     c = sim.connectome
@@ -70,6 +92,15 @@ def main():
     print("rates (Hz):", np.round(summ["rates_hz"], 2))
     print("synchrony:", round(summ["synchrony"], 2),
           " overflow:", res.overflow)
+
+    if args.validate or args.validate_json:
+        report = res.validate()
+        print(report.table())
+        if args.validate_json:
+            report.to_json(args.validate_json)
+            print("report written:", args.validate_json)
+        if not report.passed:
+            raise SystemExit(4)
 
 
 if __name__ == "__main__":

@@ -11,9 +11,9 @@ recording.
 from repro.api.backends import (Backend, FusedBackend, InstrumentedBackend,
                                 ShardedBackend, make_backend)
 from repro.core.delivery import DeliveryOverflowError
-from repro.api.probes import (Probe, ProbeContext, custom,
-                              mean_plastic_weight, pop_counts, spikes,
-                              total_counts, voltage)
+from repro.api.probes import (Probe, ProbeContext, StreamProbe, custom,
+                              mean_plastic_weight, pop_counts, spike_stats,
+                              spikes, total_counts, voltage)
 from repro.api.results import RunResult
 from repro.api.simulator import Simulator
 
@@ -21,6 +21,6 @@ __all__ = [
     "Simulator", "RunResult", "DeliveryOverflowError",
     "Backend", "FusedBackend", "InstrumentedBackend", "ShardedBackend",
     "make_backend",
-    "Probe", "ProbeContext", "custom", "mean_plastic_weight", "pop_counts",
-    "spikes", "total_counts", "voltage",
+    "Probe", "ProbeContext", "StreamProbe", "custom", "mean_plastic_weight",
+    "pop_counts", "spike_stats", "spikes", "total_counts", "voltage",
 ]

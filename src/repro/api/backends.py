@@ -9,7 +9,8 @@ functional protocol::
 
 Three engines from the seed repo are adapted:
 
-* ``fused``        — the production ``lax.scan`` path (``engine.make_step``),
+* ``fused``        — the production ``lax.scan`` path (``engine.
+                     update_phase`` + ``deliver_phase`` fused per step),
                      optionally with pair-STDP composed into the loop
                      (``stdp=`` on the Simulator),
 * ``instrumented`` — each phase a separately jitted call with wall-clock
@@ -37,12 +38,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api.probes import Probe, ProbeContext
+from repro.api.probes import Probe, ProbeContext, StreamProbe, split_probes
 from repro.core import delivery as dlv
 from repro.core import distributed as DD
 from repro.core.connectivity import Connectome
 from repro.core.engine import (SimConfig, SimState, deliver_phase, init_state,
-                               make_step, prepare_network, resolve_sim_config,
+                               prepare_network, resolve_sim_config,
                                update_phase)
 from repro.core.neuron import NeuronParams, Propagators
 
@@ -59,9 +60,24 @@ class Backend:
     def init(self, key) -> Any:
         raise NotImplementedError
 
-    def run(self, state: Any, n_steps: int, probes: Sequence[Probe]
+    def run(self, state: Any, n_steps: int, probes: Sequence[Probe],
+            stream: Optional[Dict[str, Any]] = None
             ) -> Tuple[Any, Dict[str, jnp.ndarray]]:
+        """Advance ``n_steps``; returns (state', data).
+
+        ``data`` maps per-step probe names to ``[n_steps, ...]`` arrays and
+        :class:`StreamProbe` names to their carry pytree after the run.
+        ``stream`` optionally seeds stream-probe carries (``{name:
+        carry}``); missing/None entries start fresh via ``probe.init()`` —
+        the Simulator threads carries across chunks this way.
+        """
         raise NotImplementedError
+
+    @staticmethod
+    def _stream_carries(stream_probes, stream):
+        stream = stream or {}
+        return tuple(stream[p.name] if stream.get(p.name) is not None
+                     else p.init() for p in stream_probes)
 
     # optional capabilities -------------------------------------------------
     def supports_probe(self, probe: Probe) -> bool:
@@ -133,14 +149,20 @@ class FusedBackend(Backend):
         key = (n_steps, tuple(probes))
         if key not in self._aot:
             fn = self._compiled(*key)
-            self._aot[key] = fn.lower(*self._args(state)).compile()
+            _, stream_probes = split_probes(key[1])
+            carries = self._stream_carries(stream_probes, None)
+            self._aot[key] = fn.lower(*self._args(state), carries).compile()
 
-    def run(self, state, n_steps, probes):
+    def run(self, state, n_steps, probes, stream=None):
         probes = tuple(probes)
+        step_probes, stream_probes = split_probes(probes)
+        carries = self._stream_carries(stream_probes, stream)
         fn = self._aot.get((n_steps, probes)) \
             or self._compiled(n_steps, probes)
-        state, outs = fn(*self._args(state))
-        return state, dict(zip((p.name for p in probes), outs))
+        state, carries, outs = fn(*self._args(state), carries)
+        data = dict(zip((p.name for p in step_probes), outs))
+        data.update(zip((p.name for p in stream_probes), carries))
+        return state, data
 
     def _compiled(self, n_steps: int, probes):
         key = (n_steps, probes)
@@ -148,24 +170,31 @@ class FusedBackend(Backend):
             return self._cache[key]
         c, cfg, prop = self.c, self.cfg, self.prop
         n, n_exc, n_pops = c.n_total, c.n_exc, self.n_pops
+        step_probes, stream_probes = split_probes(probes)
 
         if self.stdp is None:
-            def runner(state, net):
-                def record(st, spiked):
-                    ctx = ProbeContext(st, spiked, net, n_pops)
-                    return tuple(p(ctx) for p in probes)
-                step = make_step(net, prop, cfg, c.w_ext, n, n_exc,
-                                 n_pops, record_fn=record)
-                return jax.lax.scan(step, state, None, length=n_steps)
+            def runner(state, net, carries):
+                def step(carry, _):
+                    sim, scs = carry
+                    sim, spiked = update_phase(sim, net, prop, cfg,
+                                               c.w_ext, n)
+                    sim = deliver_phase(sim, net, cfg, spiked, n_exc)
+                    scs = tuple(p.update(sc, spiked)
+                                for p, sc in zip(stream_probes, scs))
+                    ctx = ProbeContext(sim, spiked, net, n_pops)
+                    return (sim, scs), tuple(p(ctx) for p in step_probes)
+                (state, carries), outs = jax.lax.scan(
+                    step, (state, carries), None, length=n_steps)
+                return state, carries, outs
         else:
             from repro.core import plasticity as PL
             stdp_cfg, budget = self._stdp_scaled, cfg.spike_budget
             k_out = c.targets.shape[1]
             mask = self._plastic_mask
 
-            def runner(state, net, tables):
+            def runner(state, net, tables, carries):
                 def step(carry, _):
-                    sim, ps = carry
+                    (sim, ps), scs = carry
                     sim, spiked = update_phase(sim, net, prop, cfg,
                                                c.w_ext, n)
                     live = dlv.EventTables(
@@ -178,10 +207,15 @@ class FusedBackend(Backend):
                                    sim.overflow + ovf)
                     ps = PL.stdp_step(ps, tables, spiked, stdp_cfg,
                                       budget, n_exc)
+                    scs = tuple(p.update(sc, spiked)
+                                for p, sc in zip(stream_probes, scs))
                     ctx = ProbeContext(sim, spiked, net, n_pops,
                                        plastic=ps, plastic_mask=mask)
-                    return (sim, ps), tuple(p(ctx) for p in probes)
-                return jax.lax.scan(step, state, None, length=n_steps)
+                    return ((sim, ps), scs), tuple(p(ctx)
+                                                   for p in step_probes)
+                (state, carries), outs = jax.lax.scan(
+                    step, (state, carries), None, length=n_steps)
+                return state, carries, outs
 
         fn = jax.jit(runner)
         self._cache[key] = fn
@@ -205,6 +239,7 @@ class InstrumentedBackend(Backend):
     def __init__(self):
         self.timers: Dict[str, float] = {}
         self._warmed: set = set()
+        self._stream_cache: Dict[Any, Any] = {}
 
     def build(self, c, cfg, neuron=None):
         cfg = resolve_sim_config(cfg, c)
@@ -247,35 +282,55 @@ class InstrumentedBackend(Backend):
             self._record_cache[probes] = jax.jit(record)
         return self._record_cache[probes]
 
+    def _stream_fn(self, stream_probes):
+        if stream_probes not in self._stream_cache:
+            def upd(carries, spiked):
+                return tuple(p.update(c, spiked)
+                             for p, c in zip(stream_probes, carries))
+            self._stream_cache[stream_probes] = jax.jit(upd)
+        return self._stream_cache[stream_probes]
+
     def warmup(self, state, n_steps, probes):
-        # per-step dispatch: compiling the three phase jits once is enough
+        # per-step dispatch: compiling the per-phase jits once is enough
         probes = tuple(probes)
         if probes in self._warmed:
             return
+        step_probes, stream_probes = split_probes(probes)
         _s, _spk = self._update(state)
         jax.block_until_ready(self._deliver(_s, _spk))
-        if probes:
-            jax.block_until_ready(self._record_fn(probes)(_s, _spk))
+        if step_probes:
+            jax.block_until_ready(self._record_fn(step_probes)(_s, _spk))
+        if stream_probes:
+            carries = self._stream_carries(stream_probes, None)
+            jax.block_until_ready(self._stream_fn(stream_probes)(
+                carries, _spk))
         self._warmed.add(probes)
 
-    def run(self, state, n_steps, probes):
+    def run(self, state, n_steps, probes, stream=None):
         probes = tuple(probes)
-        record = self._record_fn(probes)
+        step_probes, stream_probes = split_probes(probes)
+        record = self._record_fn(step_probes)
+        carries = self._stream_carries(stream_probes, stream)
+        upd = self._stream_fn(stream_probes) if stream_probes else None
         # warm the compile caches without advancing state (calls are pure)
         self.warmup(state, n_steps, probes)
 
-        outs = [[] for _ in probes]
+        outs = [[] for _ in step_probes]
         for _ in range(n_steps):
             state, spiked = self.step_timed(state, self.timers)
-            if probes:
+            if step_probes or stream_probes:
                 t0 = time.perf_counter()
-                vals = record(state, spiked)
-                jax.block_until_ready(vals)
+                if stream_probes:
+                    carries = upd(carries, spiked)
+                vals = record(state, spiked) if step_probes else ()
+                jax.block_until_ready((vals, carries))
                 self.timers["record"] = (self.timers.get("record", 0.0)
                                          + time.perf_counter() - t0)
                 for buf, v in zip(outs, vals):
                     buf.append(np.asarray(v))
-        data = {p.name: np.stack(buf) for p, buf in zip(probes, outs)}
+        data = {p.name: np.stack(buf)
+                for p, buf in zip(step_probes, outs)}
+        data.update(zip((p.name for p in stream_probes), carries))
         return state, data
 
 
@@ -298,6 +353,9 @@ class ShardedBackend(Backend):
 
     name = "sharded"
     _SUPPORTED = {"pop_counts", "total_counts"}
+    # StreamProbes are additionally supported: their update consumes the
+    # all-gathered global spike vector (replicated on every device), so the
+    # carry stays replicated and rides in the scan next to the state.
 
     def __init__(self, n_devices: Optional[int] = None):
         self.n_devices = n_devices
@@ -330,13 +388,17 @@ class ShardedBackend(Backend):
         self.pop_of = jnp.asarray(pop_of)
 
     def supports_probe(self, probe):
-        return probe.name in self._SUPPORTED
+        return isinstance(probe, StreamProbe) or probe.name in self._SUPPORTED
 
     def warmup(self, state, n_steps, probes):
-        if n_steps not in self._aot:
-            fn = self._compiled(n_steps)
+        _, stream_probes = split_probes(tuple(probes))
+        key = (n_steps, stream_probes)
+        if key not in self._aot:
+            fn = self._compiled(n_steps, stream_probes)
+            carries = self._stream_carries(stream_probes, None)
             with self.mesh:
-                self._aot[n_steps] = fn.lower(state, self.tables).compile()
+                self._aot[key] = fn.lower(state, self.tables,
+                                          carries).compile()
 
     def init(self, key):
         c, meta, n_dev = self.c, self.meta, self.n_dev
@@ -359,34 +421,40 @@ class ShardedBackend(Backend):
             key=keys,
             overflow=jnp.zeros((n_dev,), jnp.int32))
 
-    def run(self, state, n_steps, probes):
+    def run(self, state, n_steps, probes, stream=None):
         probes = tuple(probes)
         for p in probes:
             if not self.supports_probe(p):
                 raise NotImplementedError(
                     f"sharded backend records {sorted(self._SUPPORTED)} "
-                    f"only, got probe {p.name!r}")
-        fn = self._aot.get(n_steps) or self._compiled(n_steps)
+                    f"and StreamProbes only, got probe {p.name!r}")
+        step_probes, stream_probes = split_probes(probes)
+        carries = self._stream_carries(stream_probes, stream)
+        fn = self._aot.get((n_steps, stream_probes)) \
+            or self._compiled(n_steps, stream_probes)
         with self.mesh:
-            state, pop_counts = fn(state, self.tables)
+            state, pop_counts, carries = fn(state, self.tables, carries)
         data = {}
-        for p in probes:
+        for p in step_probes:
             if p.name == "pop_counts":
                 data[p.name] = pop_counts
             elif p.name == "total_counts":
                 data[p.name] = jnp.sum(pop_counts, axis=1)
+        data.update(zip((p.name for p in stream_probes), carries))
         return state, data
 
-    def _compiled(self, n_steps: int):
-        if n_steps not in self._cache:
+    def _compiled(self, n_steps: int, stream_probes=()):
+        key = (n_steps, stream_probes)
+        if key not in self._cache:
             c, cfg = self.c, self.cfg
             sim = DD.make_sharded_step(
                 self.mesh, self.meta, self.prop, n_exc=c.n_exc,
                 w_ext=c.w_ext, bg_rate=cfg.bg_rate, dt=cfg.dt,
                 spike_budget=cfg.spike_budget, n_steps=n_steps,
-                pop_of=self.pop_of, n_pops=self.n_pops)
-            self._cache[n_steps] = jax.jit(sim)
-        return self._cache[n_steps]
+                pop_of=self.pop_of, n_pops=self.n_pops,
+                stream_probes=stream_probes)
+            self._cache[key] = jax.jit(sim)
+        return self._cache[key]
 
 
 REGISTRY = {

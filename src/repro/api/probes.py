@@ -98,6 +98,75 @@ def custom(name: str, fn: Callable[[ProbeContext], jnp.ndarray]) -> Probe:
     return Probe(name, fn)
 
 
+# ---------------------------------------------------------------------------
+# Stream probes: stateful accumulators, one value per run instead of per step
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class StreamProbe:
+    """A stateful per-step accumulator (vs. the per-step-output ``Probe``).
+
+    ``init()`` builds the carry (a pytree of fixed-shape device arrays),
+    ``update(carry, spiked)`` absorbs one step's global spike vector.  The
+    carry threads through the backend's scan — and, via the Simulator
+    session, across ``run``/``run_chunked`` chunk boundaries — so the
+    memory cost is the carry size, independent of the horizon.  Each run's
+    result carries the current carry snapshot in ``RunResult.streams`` as
+    ``{"carry": ..., "meta": ...}``; ``meta`` is static context for the
+    finalizer (e.g. sampled ids, bin width).
+
+    Equality is identity (``eq=False``): backend compile caches are keyed
+    on probe instances, so reuse one instance across runs of a session.
+    """
+    name: str
+    init: Callable[[], object]
+    update: Callable[[object, jnp.ndarray], object]
+    meta: dict = dataclasses.field(default_factory=dict)
+
+
+def spike_stats(ids, bin_steps: int = 20,
+                name: str = "spike_stats") -> StreamProbe:
+    """Chunk-streaming spike statistics over the sampled neuron ``ids``.
+
+    Accumulates, on device and inside the simulation scan, the moments
+    behind per-population mean rate, CV-ISI and pairwise spike-count
+    correlation (see ``repro.validate.stats``); ``repro.validate.
+    validate()`` finalizes the carry.  ``bin_steps`` is the correlation
+    count-bin width in steps (20 = 2 ms at dt=0.1).
+
+    Use ``repro.validate.sample_ids(c.pop_sizes, per_pop=...)`` to build a
+    stratified sample; the O(Ns^2) correlation accumulator is why the
+    probe records a sample rather than every neuron.
+    """
+    import numpy as np
+
+    from repro.validate import stats as VS
+
+    ids = np.asarray(ids, np.int32)
+    if ids.ndim != 1 or ids.size == 0:
+        raise ValueError(f"ids must be a non-empty 1-D id array, "
+                         f"got shape {ids.shape}")
+    bin_steps = int(bin_steps)
+    if bin_steps < 1:
+        raise ValueError(f"bin_steps must be >= 1, got {bin_steps}")
+    dev_ids = jnp.asarray(ids)
+
+    def update(carry, spiked):
+        return VS.update_carry(carry, spiked[dev_ids], bin_steps=bin_steps)
+
+    return StreamProbe(name=name,
+                       init=lambda: VS.init_carry(ids.size),
+                       update=update,
+                       meta={"ids": ids, "bin_steps": bin_steps})
+
+
+def split_probes(probes: Sequence) -> tuple:
+    """(per-step Probes, StreamProbes) partition, order-preserving."""
+    step = tuple(p for p in probes if isinstance(p, Probe))
+    stream = tuple(p for p in probes if isinstance(p, StreamProbe))
+    return step, stream
+
+
 _BUILTIN = {
     "pop_counts": pop_counts,
     "spikes": spikes,
@@ -106,7 +175,7 @@ _BUILTIN = {
     "mean_plastic_weight": mean_plastic_weight,
 }
 
-ProbeLike = Union[str, Probe]
+ProbeLike = Union[str, Probe, "StreamProbe"]
 
 # name -> interned Probe instance.  Probe equality is identity-based (the
 # reducer fn is a fresh closure per factory call), and backend compile
@@ -126,8 +195,9 @@ def resolve(probes: Sequence[ProbeLike]) -> tuple:
             if p not in _INTERNED:
                 _INTERNED[p] = _BUILTIN[p]()
             p = _INTERNED[p]
-        elif not isinstance(p, Probe):
-            raise TypeError(f"probe must be a name or Probe, got {type(p)}")
+        elif not isinstance(p, (Probe, StreamProbe)):
+            raise TypeError(f"probe must be a name, Probe or StreamProbe, "
+                            f"got {type(p)}")
         out.append(p)
     names = [p.name for p in out]
     if len(set(names)) != len(names):

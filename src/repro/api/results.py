@@ -34,6 +34,11 @@ class RunResult:
     wall_s: float
     overflow: int = 0
     timers: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # StreamProbe snapshots: name -> {"carry": moment pytree (host numpy),
+    # "meta": probe context for the finalizer}.  Carries accumulate across
+    # the session, so a chunked run's last snapshot covers the whole
+    # horizon (repro.validate.finalize / validate read this).
+    streams: Dict[str, dict] = dataclasses.field(default_factory=dict)
     _connectome: Optional[object] = dataclasses.field(
         default=None, repr=False)
 
@@ -61,6 +66,11 @@ class RunResult:
         return recording.activity_summary(
             self["pop_counts"], self._connectome, self.dt)
 
+    def validate(self, spec=None):
+        """Judge this run against reference bands; see ``repro.validate``."""
+        from repro import validate as V
+        return V.validate(self, spec=spec)
+
 
 def concat(results: List[RunResult]) -> RunResult:
     """Concatenate chunk results along the step axis (``run_chunked``)."""
@@ -83,5 +93,8 @@ def concat(results: List[RunResult]) -> RunResult:
         wall_s=sum(r.wall_s for r in results),
         overflow=results[-1].overflow,
         timers=timers,
+        # stream carries accumulate: the last chunk's snapshot covers the
+        # whole concatenated horizon
+        streams=results[-1].streams,
         _connectome=head._connectome,
     )

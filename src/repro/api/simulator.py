@@ -126,6 +126,9 @@ class Simulator:
         self._steps_done = 0
         self._t_model_ms = 0.0
         self._overflow_seen = 0
+        # StreamProbe carries (name -> pytree), threaded across runs/chunks
+        # of the session so streamed statistics cover the whole horizon
+        self._stream_state = {}
 
     @property
     def state(self):
@@ -172,22 +175,33 @@ class Simulator:
         phase, as in the paper's measurement protocol.
         """
         pr = self.probes if probes is None else probes_mod.resolve(probes)
+        _, stream_probes = probes_mod.split_probes(pr)
         self._maybe_presim(presim_ms)
         n_steps = self._steps(t_ms)
         timers0 = dict(self.timers)
+        stream_in = {p.name: self._stream_state.get(p.name)
+                     for p in stream_probes}
         t0 = time.perf_counter()
-        self._state, data = self.backend.run(self._state, n_steps, pr)
+        self._state, data = self.backend.run(self._state, n_steps, pr,
+                                             stream=stream_in)
         jax.block_until_ready((self._state, data))
         wall = time.perf_counter() - t0
         self._steps_done += n_steps
         self._t_model_ms += n_steps * self.sim_config.dt
         timers = {k: v - timers0.get(k, 0.0)
                   for k, v in self.timers.items()}
+        streams = {}
+        for p in stream_probes:
+            carry = data.pop(p.name)
+            self._stream_state[p.name] = carry
+            # host-offloaded snapshot: chunked runs keep device memory flat
+            streams[p.name] = {"carry": jax.tree.map(np.asarray, carry),
+                               "meta": dict(p.meta)}
         overflow = self._check_overflow()
         return RunResult(
             data=dict(data), t_model_ms=n_steps * self.sim_config.dt,
             n_steps=n_steps, dt=self.sim_config.dt, wall_s=wall,
-            overflow=overflow, timers=timers,
+            overflow=overflow, timers=timers, streams=streams,
             _connectome=self.connectome)
 
     def _check_overflow(self) -> int:
@@ -273,7 +287,13 @@ class Simulator:
         """Resume a saved session: state, presim flag, and step counters.
 
         The target structure comes from this Simulator, so config/backend
-        must match what was saved (shape mismatches fail loudly)."""
+        must match what was saved (shape mismatches fail loudly).
+
+        Stream-probe statistics are NOT part of the checkpoint (their
+        carry set depends on the probes of the restoring session, not the
+        saving one): the accumulators restart empty at the restore point,
+        so streamed statistics cover the post-restore window only —
+        never a stale or double-counted one."""
         from repro.checkpoint import checkpointer
         pkg = checkpointer.restore(directory, self._package(), step=step)
         for got, want in zip(jax.tree.leaves(pkg["state"]),
@@ -289,3 +309,4 @@ class Simulator:
         self._steps_done = int(pkg["steps_done"])
         self._t_model_ms = float(pkg["t_model_ms"])
         self._overflow_seen = self.backend.overflow(self._state)
+        self._stream_state = {}    # see docstring: stats restart, cleanly

@@ -140,14 +140,21 @@ def abstract_state(n_pad: int, n_dev: int, d_ring: int) -> ShardedSimState:
 def make_sharded_step(mesh, meta: dict, prop: Propagators, *,
                       n_exc: int, w_ext: float, bg_rate: float, dt: float,
                       spike_budget: int, n_steps: int,
-                      pop_of=None, n_pops: int = 8):
-    """Returns a shard_map'd ``sim_chunk(state, tables) -> (state, counts)``.
+                      pop_of=None, n_pops: int = 8, stream_probes=()):
+    """Returns a shard_map'd ``sim_chunk(state, tables, carries) ->
+    (state, counts, carries)``.
 
     ``counts``: [n_steps, n_dev] spikes per device per step (cheap record).
     With ``pop_of`` (a [n_pad] global population index, sentinel ``n_pops``
     for padding neurons), counts become [n_steps, n_pops] per-population
     spike counts instead — reduced from the all-gathered spike registry, so
     identical on every device (replicated output).
+
+    ``stream_probes`` (``repro.api.probes.StreamProbe``) accumulate inside
+    the scan from the same all-gathered registry: each ``update(carry,
+    spiked_global)`` sees the full (padded) global spike vector, which is
+    replicated across devices, so the carries ride as replicated in/outputs
+    — NEST-style streaming statistics without any extra collective.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
@@ -162,9 +169,12 @@ def make_sharded_step(mesh, meta: dict, prop: Propagators, *,
     tab_spec = ShardedTables(
         targets=P(None, axes), weights=P(None, axes), dbins=P(None, axes),
         k_ext=P(axes), i_dc=P(axes))
+    stream_probes = tuple(stream_probes)
+    carries_spec = jax.tree.map(
+        lambda _: P(), tuple(p.init() for p in stream_probes))
 
     def step(carry, _, tab: ShardedTables):
-        st: ShardedSimState = carry
+        st, scs = carry
         D_ring = st.ring.shape[0]
         slot = st.t % D_ring
         arrivals = jax.lax.dynamic_index_in_dim(st.ring, slot, 0, False)
@@ -209,6 +219,8 @@ def make_sharded_step(mesh, meta: dict, prop: Propagators, *,
         overflow = st.overflow + jnp.maximum(n_spk - spike_budget, 0)
         new = ShardedSimState(V, I_ex, I_in, refrac, ring, st.t + 1,
                               key[None], overflow)
+        scs = tuple(p.update(sc, spiked_global)
+                    for p, sc in zip(stream_probes, scs))
         if pop_of is not None:
             # every device holds the full registry -> identical reduction
             counts = jax.ops.segment_sum(
@@ -216,18 +228,20 @@ def make_sharded_step(mesh, meta: dict, prop: Propagators, *,
                 num_segments=n_pops + 1, indices_are_sorted=True)[:n_pops]
         else:
             counts = jnp.sum(spiked, dtype=jnp.int32)[None]
-        return new, counts
+        return (new, scs), counts
 
     counts_spec = P(None, None) if pop_of is not None else P(None, axes)
 
     @functools.partial(
         shard_map, mesh=mesh,
-        in_specs=(state_spec, tab_spec),
-        out_specs=(state_spec, counts_spec),
+        in_specs=(state_spec, tab_spec, carries_spec),
+        out_specs=(state_spec, counts_spec, carries_spec),
         check_rep=False)
-    def sim_chunk(state, tables):
-        return jax.lax.scan(
-            functools.partial(step, tab=tables), state, None, length=n_steps)
+    def sim_chunk(state, tables, carries):
+        (state, carries), counts = jax.lax.scan(
+            functools.partial(step, tab=tables), (state, carries), None,
+            length=n_steps)
+        return state, counts, carries
 
     return sim_chunk
 

@@ -34,15 +34,36 @@ def cv_isi(spikes: np.ndarray, min_spikes: int = 3) -> float:
     """Mean coefficient of variation of inter-spike intervals.
 
     ~1 for Poisson-like (irregular) firing; the AI regime of the microcircuit
-    has population-mean CV ISI in roughly [0.7, 1.2].
+    has population-mean CV ISI in roughly [0.7, 1.2].  Delegates to the
+    streaming moment accumulator of ``repro.validate.stats`` (one
+    implementation for raster and in-scan paths).
     """
-    cvs = []
-    for train in spike_trains(spikes):
-        if train.shape[0] >= min_spikes:
-            isi = np.diff(train)
-            if isi.mean() > 0:
-                cvs.append(isi.std() / isi.mean())
-    return float(np.mean(cvs)) if cvs else float("nan")
+    from repro.validate import stats as VS
+    spikes = np.asarray(spikes)
+    acc = VS.RasterAccumulator(spikes.shape[1],
+                               bin_steps=max(spikes.shape[0], 1),
+                               correlation=False)   # stay O(N) memory
+    acc.update(spikes)
+    cv = VS._cv_per_neuron(acc.carry, min_spikes)
+    return float(np.nanmean(cv)) if np.isfinite(cv).any() else float("nan")
+
+
+def pairwise_correlation(spikes: np.ndarray, bin_steps: int = 20) -> float:
+    """Mean pairwise Pearson correlation of ``bin_steps``-binned counts.
+
+    Near 0 for the microcircuit's asynchronous-irregular state; computed
+    through the same second-moment accumulator as the streaming probe.
+    """
+    from repro.validate import stats as VS
+    spikes = np.asarray(spikes)
+    acc = VS.RasterAccumulator(spikes.shape[1], bin_steps=bin_steps)
+    acc.update(spikes)
+    corr = VS._corr_matrix(acc.carry)
+    if corr is None:
+        return float("nan")
+    vals = corr[np.triu_indices(corr.shape[0], k=1)]
+    vals = vals[np.isfinite(vals)]
+    return float(vals.mean()) if vals.size else float("nan")
 
 
 def synchrony(pop_counts: np.ndarray, bin_steps: int = 10) -> float:

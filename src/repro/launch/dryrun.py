@@ -220,7 +220,8 @@ def lower_microcircuit(strategy: str, multi_pod: bool):
         state = DD.abstract_state(n_pad, n_dev, d_ring)
         tables = DD.abstract_sharded_tables({}, n_dev, k_loc, n_pad)
         with mesh:
-            lowered = jax.jit(sim, donate_argnums=(0,)).lower(state, tables)
+            lowered = jax.jit(sim, donate_argnums=(0,)).lower(state, tables,
+                                                              ())
     else:
         n_pad = -(-n // 512) * 512          # silent-neuron padding
         sim = DD.make_dense_step(

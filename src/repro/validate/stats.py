@@ -1,0 +1,325 @@
+"""Streaming spike statistics: rates, CV of ISI, pairwise correlation.
+
+The validation bar for microcircuit reproductions (Golosio et al. 2020,
+Senk et al. 2025) is statistical: per-population firing rate, irregularity
+(coefficient of variation of the inter-spike intervals) and pairwise
+spike-count correlation must land in the bands of the NEST reference.
+Computing those from a dense ``[T, N]`` raster needs O(T*N) memory — at
+full scale and paper horizons (77k neurons, 10 s = 100k steps) that is
+gigabytes of spike storage for statistics whose sufficient summary is a
+few small moment arrays.
+
+This module keeps the *moments* instead of the raster:
+
+* per sampled neuron: spike count, last-spike step, ISI count / sum /
+  sum-of-squares  (CV ISI from the first two ISI moments),
+* per closed count bin: the binned spike-count vector's running sum and
+  running outer product  (pairwise correlation from second moments).
+
+``init_carry`` / ``update_carry`` are pure jnp and run *inside* the
+simulation scan (the ``spike_stats`` stream probe in ``repro.api.probes``);
+:class:`RasterAccumulator` is the host-side mirror for recorded rasters
+and serves as the test oracle of the in-scan path.  Both produce the same
+carry (bitwise at test horizons; see the class docstring for the float32
+caveat), finalized once by :func:`finalize` into a
+:class:`SpikeStatistics`.
+
+Memory is O(Ns^2) for Ns sampled neurons — independent of the simulated
+horizon, which is what lets ``run_chunked`` stream days of biological time
+through a constant-size accumulator.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class SpikeStatsCarry(NamedTuple):
+    """Device-resident moment accumulator over ``Ns`` sampled neurons.
+
+    A pytree of fixed-shape arrays so it can live in a ``lax.scan`` carry
+    and thread across ``run_chunked`` chunk boundaries unchanged (ISIs that
+    span a boundary are counted exactly, not dropped).
+    """
+    steps: jnp.ndarray       # [] int32   updates consumed so far
+    last_spike: jnp.ndarray  # [Ns] int32 step of last spike, -1 = never
+    n_spikes: jnp.ndarray    # [Ns] int32
+    isi_count: jnp.ndarray   # [Ns] int32 completed inter-spike intervals
+    isi_sum: jnp.ndarray     # [Ns] f32   sum of ISIs (in steps)
+    isi_sumsq: jnp.ndarray   # [Ns] f32   sum of squared ISIs
+    bin_acc: jnp.ndarray     # [Ns] int32 open (partial) count bin
+    n_bins: jnp.ndarray      # [] int32   closed bins
+    bin_sum: jnp.ndarray     # [Ns] f32   sum of closed-bin count vectors
+    bin_outer: jnp.ndarray   # [Ns, Ns] f32 sum of their outer products
+
+
+def init_carry(n_sample: int) -> SpikeStatsCarry:
+    return SpikeStatsCarry(
+        steps=jnp.zeros((), jnp.int32),
+        last_spike=jnp.full((n_sample,), -1, jnp.int32),
+        n_spikes=jnp.zeros((n_sample,), jnp.int32),
+        isi_count=jnp.zeros((n_sample,), jnp.int32),
+        isi_sum=jnp.zeros((n_sample,), jnp.float32),
+        isi_sumsq=jnp.zeros((n_sample,), jnp.float32),
+        bin_acc=jnp.zeros((n_sample,), jnp.int32),
+        n_bins=jnp.zeros((), jnp.int32),
+        bin_sum=jnp.zeros((n_sample,), jnp.float32),
+        bin_outer=jnp.zeros((n_sample, n_sample), jnp.float32),
+    )
+
+
+def update_carry(carry: SpikeStatsCarry, spiked: jnp.ndarray,
+                 bin_steps: int) -> SpikeStatsCarry:
+    """Absorb one step's sampled spike vector (``[Ns]`` bool).
+
+    ``bin_steps`` is static (baked into the jitted step).  A count bin
+    closes every ``bin_steps`` updates; the trailing partial bin is left
+    open and ignored by ``finalize``.
+    """
+    t = carry.steps
+    spk = spiked.astype(jnp.bool_)
+    spk_i = spk.astype(jnp.int32)
+
+    new_isi = spk & (carry.last_spike >= 0)
+    isi = (t - carry.last_spike).astype(jnp.float32)
+    isi_add = jnp.where(new_isi, isi, 0.0)
+
+    steps = t + 1
+    close = (steps % bin_steps) == 0
+    bin_acc = carry.bin_acc + spk_i
+    x = bin_acc.astype(jnp.float32)
+    # the O(Ns^2) outer product only runs on the bin-closing step
+    bin_outer = jax.lax.cond(
+        close, lambda bo: bo + jnp.outer(x, x), lambda bo: bo,
+        carry.bin_outer)
+
+    return SpikeStatsCarry(
+        steps=steps,
+        last_spike=jnp.where(spk, t, carry.last_spike),
+        n_spikes=carry.n_spikes + spk_i,
+        isi_count=carry.isi_count + new_isi.astype(jnp.int32),
+        isi_sum=carry.isi_sum + isi_add,
+        isi_sumsq=carry.isi_sumsq + isi_add * isi,
+        bin_acc=jnp.where(close, 0, bin_acc),
+        n_bins=carry.n_bins + close.astype(jnp.int32),
+        bin_sum=jnp.where(close, carry.bin_sum + x, carry.bin_sum),
+        bin_outer=bin_outer,
+    )
+
+
+class RasterAccumulator:
+    """Host-side mirror of the in-scan accumulator, fed ``[T, Ns]`` rasters.
+
+    Chunk-feeding ``update`` repeatedly is exactly equivalent to one call
+    on the concatenated raster, and both match the device carry bitwise at
+    test horizons (same float32 moment arithmetic, same bin alignment from
+    step 0) — the equivalence is under test in ``tests/test_validate.py``.
+    (At extreme horizons, where partial sums leave float32's exact range,
+    the two sides can drift by ULPs: the host sums each chunk's ISIs with
+    numpy's pairwise reduction while the device adds per step.)
+
+    ``correlation=False`` skips the O(Ns^2) binned-count outer-product
+    accumulator — for CV-/rate-only consumers (``recording.cv_isi``) over
+    many neurons, where allocating [Ns, Ns] would dominate or OOM.
+    """
+
+    def __init__(self, n_sample: int, bin_steps: int,
+                 correlation: bool = True):
+        self.bin_steps = int(bin_steps)
+        self.correlation = bool(correlation)
+        carry = jax.tree.map(np.asarray, init_carry(n_sample))
+        if not self.correlation:
+            carry = carry._replace(bin_outer=np.zeros((0, 0), np.float32))
+        self.carry = carry
+
+    def update(self, raster: np.ndarray) -> None:
+        """Absorb a ``[T, Ns]`` bool/int chunk."""
+        raster = np.asarray(raster)
+        if raster.ndim != 2 or raster.shape[1] != self.carry.n_spikes.shape[0]:
+            raise ValueError(
+                f"raster must be [T, {self.carry.n_spikes.shape[0]}], "
+                f"got {raster.shape}")
+        spk = raster.astype(bool)
+        c = self.carry
+        t0 = int(c.steps)
+        T, ns = spk.shape
+
+        # --- ISI moments + counts (vectorised per neuron over its train) ---
+        last_spike = np.asarray(c.last_spike).copy()
+        n_spikes = np.asarray(c.n_spikes) + spk.sum(axis=0).astype(np.int32)
+        isi_count = np.asarray(c.isi_count).copy()
+        isi_sum = np.asarray(c.isi_sum).copy()
+        isi_sumsq = np.asarray(c.isi_sumsq).copy()
+        t_idx, nrn = np.nonzero(spk)
+        order = np.argsort(nrn, kind="stable")
+        t_idx, nrn = t_idx[order] + t0, nrn[order]
+        splits = np.searchsorted(nrn, np.arange(1, ns))
+        for j, train in enumerate(np.split(t_idx, splits)):
+            if train.size == 0:
+                continue
+            prev = last_spike[j]
+            times = train if prev < 0 else np.concatenate([[prev], train])
+            isis = np.diff(times).astype(np.float64)
+            isi_count[j] += isis.size
+            isi_sum[j] += np.float32(isis.astype(np.float32).sum())
+            isi_sumsq[j] += np.float32(
+                (isis.astype(np.float32) ** 2).sum())
+            last_spike[j] = train[-1]
+
+        # --- count bins (closed at absolute steps that are multiples of
+        #     bin_steps, so chunking never shifts the bin grid) ---
+        bin_acc = np.asarray(c.bin_acc).copy()
+        n_bins = int(c.n_bins)
+        bin_sum = np.asarray(c.bin_sum).copy()
+        bin_outer = np.asarray(c.bin_outer).copy()
+        counts = spk.astype(np.int32)
+        pos = 0
+        while pos < T:
+            fill = self.bin_steps - ((t0 + pos) % self.bin_steps)
+            take = min(fill, T - pos)
+            bin_acc = bin_acc + counts[pos:pos + take].sum(axis=0)
+            pos += take
+            if take == fill:                      # bin closed
+                x = bin_acc.astype(np.float32)
+                bin_sum = (bin_sum + x).astype(np.float32)
+                if self.correlation:
+                    bin_outer = (bin_outer
+                                 + np.outer(x, x)).astype(np.float32)
+                n_bins += 1
+                bin_acc = np.zeros_like(bin_acc)
+
+        self.carry = SpikeStatsCarry(
+            steps=np.int32(t0 + T), last_spike=last_spike.astype(np.int32),
+            n_spikes=n_spikes.astype(np.int32),
+            isi_count=isi_count.astype(np.int32),
+            isi_sum=isi_sum.astype(np.float32),
+            isi_sumsq=isi_sumsq.astype(np.float32),
+            bin_acc=bin_acc.astype(np.int32), n_bins=np.int32(n_bins),
+            bin_sum=bin_sum.astype(np.float32),
+            bin_outer=bin_outer.astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Finalization: moments -> statistics
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SpikeStatistics:
+    """Per-population statistics finalized from a moment carry."""
+    rate_hz: np.ndarray          # [n_pops] sample-mean firing rate
+    cv_isi: np.ndarray           # [n_pops] mean CV ISI (nan: no qualifying)
+    correlation: np.ndarray      # [n_pops] mean pairwise count correlation
+    n_sampled: np.ndarray        # [n_pops] neurons sampled
+    n_cv_valid: np.ndarray       # [n_pops] neurons with >= min_spikes spikes
+    n_corr_valid: np.ndarray     # [n_pops] neurons with count variance > 0
+    t_model_ms: float            # statistics window (model time)
+    n_bins: int                  # closed correlation bins
+    bin_ms: float
+
+
+def _cv_per_neuron(carry, min_spikes: int) -> np.ndarray:
+    """CV = std/mean of each neuron's ISIs (ddof=0), nan when fewer than
+    ``min_spikes`` spikes (i.e. < min_spikes-1 ISIs) were seen."""
+    count = np.asarray(carry.isi_count, np.float64)
+    valid = count >= max(min_spikes - 1, 1)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        mean = np.asarray(carry.isi_sum, np.float64) / count
+        var = np.asarray(carry.isi_sumsq, np.float64) / count - mean ** 2
+        cv = np.sqrt(np.maximum(var, 0.0)) / mean
+    cv[~valid | ~(mean > 0)] = np.nan
+    return cv
+
+
+def _corr_matrix(carry) -> Optional[np.ndarray]:
+    """Pairwise Pearson correlation of the closed-bin counts (nan rows for
+    zero-variance neurons); None with fewer than 2 closed bins."""
+    nb = int(carry.n_bins)
+    if nb < 2:
+        return None
+    mean = np.asarray(carry.bin_sum, np.float64) / nb
+    cov = np.asarray(carry.bin_outer, np.float64) / nb - np.outer(mean, mean)
+    sd = np.sqrt(np.maximum(np.diag(cov), 0.0))
+    with np.errstate(divide="ignore", invalid="ignore"):
+        corr = cov / np.outer(sd, sd)
+    corr[sd == 0, :] = np.nan
+    corr[:, sd == 0] = np.nan
+    return corr
+
+
+def finalize(carry, ids: np.ndarray, pop_of: np.ndarray, n_pops: int,
+             dt: float, bin_steps: int, min_spikes: int = 3
+             ) -> SpikeStatistics:
+    """Reduce a moment carry to per-population statistics.
+
+    ``ids`` are the sampled neuron ids (global), ``pop_of`` the global
+    [N] population index, ``dt`` the step in ms.  ``min_spikes`` follows
+    the reference analysis (``recording.cv_isi``): a neuron enters the CV
+    average only with at least 3 spikes.
+    """
+    carry = jax.tree.map(np.asarray, carry)
+    ids = np.asarray(ids)
+    pops = np.asarray(pop_of)[ids]
+    steps = int(carry.steps)
+    t_s = steps * dt * 1e-3
+    if steps == 0:
+        raise ValueError("cannot finalize an empty statistics carry "
+                         "(0 steps accumulated)")
+
+    rate_per_neuron = np.asarray(carry.n_spikes, np.float64) / t_s
+    cv = _cv_per_neuron(carry, min_spikes)
+    corr = _corr_matrix(carry)
+
+    rate_hz = np.full(n_pops, np.nan)
+    cv_pop = np.full(n_pops, np.nan)
+    corr_pop = np.full(n_pops, np.nan)
+    n_sampled = np.zeros(n_pops, np.int64)
+    n_cv = np.zeros(n_pops, np.int64)
+    n_corr = np.zeros(n_pops, np.int64)
+    for p in range(n_pops):
+        sel = pops == p
+        n_sampled[p] = sel.sum()
+        if not sel.any():
+            continue
+        rate_hz[p] = rate_per_neuron[sel].mean()
+        cv_sel = cv[sel]
+        n_cv[p] = np.isfinite(cv_sel).sum()
+        if n_cv[p]:
+            cv_pop[p] = np.nanmean(cv_sel)
+        if corr is not None:
+            sub = corr[np.ix_(sel, sel)]
+            finite_rows = np.isfinite(np.diag(sub))
+            n_corr[p] = finite_rows.sum()
+            sub = sub[np.ix_(finite_rows, finite_rows)]
+            if sub.shape[0] >= 2:
+                iu = np.triu_indices(sub.shape[0], k=1)
+                vals = sub[iu]
+                vals = vals[np.isfinite(vals)]
+                if vals.size:
+                    corr_pop[p] = vals.mean()
+    return SpikeStatistics(
+        rate_hz=rate_hz, cv_isi=cv_pop, correlation=corr_pop,
+        n_sampled=n_sampled, n_cv_valid=n_cv, n_corr_valid=n_corr,
+        t_model_ms=steps * dt, n_bins=int(carry.n_bins),
+        bin_ms=bin_steps * dt)
+
+
+def sample_ids(pop_sizes: Sequence[int], per_pop: int = 100,
+               seed: int = 0) -> np.ndarray:
+    """Sample up to ``per_pop`` neuron ids per population (sorted).
+
+    Sampling (rather than recording everyone) is what keeps the O(Ns^2)
+    correlation accumulator small at natural density; 100 per population
+    matches the recorded-subset convention of the GPU reproductions.
+    """
+    rng = np.random.default_rng(seed)
+    offsets = np.concatenate([[0], np.cumsum(pop_sizes)])
+    out = []
+    for p, size in enumerate(pop_sizes):
+        k = min(per_pop, int(size))
+        out.append(np.sort(rng.choice(int(size), size=k, replace=False))
+                   + offsets[p])
+    return np.concatenate(out).astype(np.int32)

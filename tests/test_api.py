@@ -145,6 +145,43 @@ def test_state_dtype_threads_through(smoke_c):
     assert sim.state.ring.dtype == jnp.bfloat16
 
 
+def test_determinism_across_run_modes(medium_connectome, tmp_path):
+    """Same seed -> bitwise-identical spike trains across a single fused
+    run, a chunked run, and a checkpoint-restore-resumed session, at
+    scale 0.05 (the paper's measurement scale ladder)."""
+    cfg = dataclasses.replace(SMOKE, n_scaling=0.05, k_scaling=0.05,
+                              t_presim=0.0, spike_budget=256)
+    t_ms, probes = 20.0, ("spikes",)
+
+    sim = Simulator(cfg, connectome=medium_connectome, probes=probes)
+    want = sim.run(t_ms)["spikes"]
+
+    chunked = Simulator(cfg, connectome=medium_connectome, probes=probes) \
+        .run_chunked(t_ms, chunk_ms=7.0)["spikes"]      # uneven chunks
+    np.testing.assert_array_equal(want, chunked)
+
+    d = str(tmp_path / "ckpt")
+    first = Simulator(cfg, connectome=medium_connectome, probes=probes)
+    a = first.run(t_ms / 2)["spikes"]
+    first.save(d)
+    resumed = Simulator(cfg, connectome=medium_connectome, probes=probes)
+    resumed.restore(d)
+    b = resumed.run(t_ms / 2)["spikes"]
+    np.testing.assert_array_equal(want, np.concatenate([a, b], axis=0))
+
+
+def test_legacy_shims_warn(smoke_c):
+    """The deprecation contract pinned explicitly (pytest.ini silences
+    these warnings suite-wide because they are asserted here)."""
+    from repro.core import simulate
+    from repro.core.engine import PhaseRunner, SimConfig
+    cfg = SimConfig(spike_budget=64, record="none")
+    with pytest.warns(DeprecationWarning, match="repro.api.Simulator"):
+        simulate(smoke_c, 1.0, cfg)
+    with pytest.warns(DeprecationWarning, match="instrumented"):
+        PhaseRunner(smoke_c, cfg)
+
+
 def test_backend_instance_and_rtf_accounting(smoke_c):
     sim = Simulator(CFG, connectome=smoke_c, backend=FusedBackend())
     res = sim.run(3.0)

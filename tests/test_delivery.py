@@ -152,6 +152,84 @@ def test_ell_kernel_matches_ref_oracle(tiny_c):
         assert int(ovf_g) == int(ovf_w)
 
 
+def _synthetic_ell(n, k, d_bins, n_exc, seed=0):
+    """Hand-built ELL tables (no microcircuit), for exact-N edge geometry."""
+    rng = np.random.default_rng(seed)
+    targets = rng.integers(0, n, size=(n, k)).astype(np.int32)
+    weights = rng.normal(size=(n, k)).astype(np.float32)
+    dbins = rng.integers(1, d_bins, size=(n, k)).astype(np.int32)
+    # ragged rows: sentinel-pad a random suffix of each row
+    cut = rng.integers(1, k + 1, size=n)
+    pad = np.arange(k)[None, :] >= cut[:, None]
+    targets[pad] = n
+    weights[pad] = 0.0
+    dbins[pad] = 1
+    tables = dlv.make_event_tables(jnp.asarray(targets),
+                                   jnp.asarray(weights), jnp.asarray(dbins))
+    ring = jnp.asarray(rng.normal(size=(d_bins, 2, n + 1)).astype(np.float32))
+    return tables, ring
+
+
+@pytest.mark.parametrize("case", ["zero_spikes", "budget_exact",
+                                  "budget_overflow", "tile_remainder"])
+def test_ell_kernel_interpret_edge_cases(case):
+    """The interpret-mode ell kernel vs the event oracle at the edges:
+    a spike-free step, a budget-saturating step (exactly full and
+    overflowing), and a single-neuron tile remainder (N+1 = one column
+    past the 128-lane tile, K far below one tile)."""
+    from repro.kernels import ops as kops
+    n, k, d_bins, n_exc, budget = 64, 7, 5, 40, 16
+    if case == "tile_remainder":
+        n, n_exc = 128, 100                  # n_cols = 129 = 128 + 1
+    seed = {"zero_spikes": 11, "budget_exact": 22,
+            "budget_overflow": 33, "tile_remainder": 44}[case]
+    tables, ring = _synthetic_ell(n, k, d_bins, n_exc, seed=seed)
+    rng = np.random.default_rng(1)
+    if case == "zero_spikes":
+        spiked = np.zeros(n, bool)
+    elif case == "budget_exact":
+        spiked = np.zeros(n, bool)
+        spiked[rng.choice(n, size=budget, replace=False)] = True
+    elif case == "budget_overflow":
+        spiked = np.zeros(n, bool)
+        spiked[rng.choice(n, size=budget + 5, replace=False)] = True
+    else:
+        spiked = rng.random(n) < 0.1
+    spiked = jnp.asarray(spiked)
+    t = jnp.asarray(3, jnp.int32)
+
+    want, ovf_w = dlv.deliver_event(ring, tables, spiked, t, n_exc, budget)
+    got, ovf_g = kops.ell_deliver(ring, tables, spiked, t, n_exc, budget,
+                                  interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-5)
+    assert int(ovf_g) == int(ovf_w)
+    if case == "zero_spikes":
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ring))
+        assert int(ovf_g) == 0
+    elif case == "budget_exact":
+        assert int(ovf_g) == 0
+    elif case == "budget_overflow":
+        assert int(ovf_g) == 5
+
+
+def test_ell_strategy_zero_spike_step_full_cycle(tiny_c):
+    """A spike-free step through the registered strategy's kernel path
+    leaves the ring bit-identical (the sentinel rows scatter weight 0
+    into the dump column only)."""
+    c = tiny_c
+    cfg = dataclasses.replace(
+        resolve_sim_config(SimConfig(strategy="ell", spike_budget=32), c),
+        use_deliver_kernel=True)
+    strat = dlv.get_strategy("ell")
+    tables = strat.prepare(c, cfg)
+    ring = jnp.zeros((c.d_max_bins, 2, c.n_total + 1), jnp.float32)
+    r2, ovf = strat.deliver(ring, tables, jnp.zeros(c.n_total, bool),
+                            jnp.asarray(0, jnp.int32), c.n_exc, cfg)
+    assert int(ovf) == 0
+    np.testing.assert_array_equal(np.asarray(r2), np.asarray(ring))
+
+
 def test_ell_table_rows_are_lane_padded(tiny_c):
     tables = dlv.get_strategy("ell").prepare(tiny_c, SimConfig())
     assert tables.targets.shape[1] % dlv.EllDelivery.block_k == 0

@@ -59,7 +59,7 @@ def test_sharded_snn_matches_single_device():
             key=jax.random.split(jax.random.PRNGKey(2), 8),
             overflow=jnp.zeros((8,), jnp.int32))
         with mesh:
-            state2, counts = jax.jit(sim)(state, tabs)
+            state2, counts, _ = jax.jit(sim)(state, tabs, ())
         counts = np.asarray(counts).sum(axis=1)
         assert (rec1 == counts).all(), (rec1[:20], counts[:20])
         assert int(np.asarray(state2.overflow).sum()) == 0

@@ -55,6 +55,92 @@ else:
         _check_lif_update_property(dt, n)
 
 
+def _check_lif_kernel_vs_lif_step(seed, n, refrac_max, v_offset, block):
+    """Random state/inputs: the Pallas kernel (interpret mode, explicit
+    block so N need not divide it) == core.neuron.lif_step exactly.
+
+    ``v_offset`` shifts the V distribution across the threshold so the
+    spiking / refractory-entry branches are exercised, not just decay.
+    """
+    from repro.core.neuron import lif_step
+    from repro.kernels.lif_update import lif_update_pallas
+
+    prop = Propagators.make(NeuronParams(), 0.1)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 7)
+    st_ = NeuronState(
+        V=jax.random.uniform(ks[0], (n,), minval=-80.0, maxval=-45.0)
+        + v_offset,
+        I_ex=jax.random.uniform(ks[1], (n,)) * 400,
+        I_in=-jax.random.uniform(ks[2], (n,)) * 400,
+        refrac=jax.random.randint(ks[3], (n,), 0, refrac_max + 1))
+    in_ex = jax.random.uniform(ks[4], (n,)) * 100
+    in_in = -jax.random.uniform(ks[5], (n,)) * 100
+    i_dc = jax.random.uniform(ks[6], (n,), minval=-20.0, maxval=20.0)
+
+    want_state, want_spk = lif_step(st_, prop, in_ex, in_in, i_dc)
+    got = lif_update_pallas(st_.V, st_.I_ex, st_.I_in, st_.refrac,
+                            in_ex, in_in, i_dc, prop=prop, block=block,
+                            interpret=True)
+    # float state: last-ulp tolerance (interpreter vs XLA fusion order);
+    # discrete outputs (refractory counter, spike vector) must be exact
+    for a, b in zip(got[:3], want_state[:3]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-7, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(got[3]),
+                                  np.asarray(want_state.refrac))
+    np.testing.assert_array_equal(np.asarray(got[4]), np.asarray(want_spk))
+
+
+if st is not None:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2 ** 16),
+           n=st.integers(1, 700),
+           refrac_max=st.sampled_from([0, 1, 2, 20]),
+           v_offset=st.sampled_from([0.0, 10.0, 25.0]),
+           block=st.sampled_from([128, 256, 512]))
+    def test_lif_kernel_vs_lif_step_property(seed, n, refrac_max, v_offset,
+                                             block):
+        _check_lif_kernel_vs_lif_step(seed, n, refrac_max, v_offset, block)
+else:
+    @pytest.mark.parametrize("seed,n,refrac_max,v_offset,block", [
+        (0, 1, 0, 0.0, 128),          # single neuron, no refractoriness
+        (1, 255, 2, 10.0, 128),       # N = block - 1 (tile remainder)
+        (2, 257, 1, 25.0, 256),       # N = block + 1, hot (spiking) V band
+        (3, 640, 20, 10.0, 512),      # N not a multiple of the block
+    ])
+    def test_lif_kernel_vs_lif_step_property(seed, n, refrac_max, v_offset,
+                                             block):
+        _check_lif_kernel_vs_lif_step(seed, n, refrac_max, v_offset, block)
+
+
+def test_lif_kernel_refractory_edge_cases():
+    """The refractory boundary, pinned exactly: a neuron with refrac==1
+    leaves refractoriness next step; refrac==0 at threshold spikes and
+    re-enters with the full period; a refractory neuron never spikes even
+    with V past threshold."""
+    from repro.core.neuron import lif_step
+    from repro.kernels.lif_update import lif_update_pallas
+
+    prop = Propagators.make(NeuronParams(), 0.1)
+    V = jnp.array([-49.0, -49.0, -49.0, -80.0], jnp.float32)  # 3 hot, 1 cold
+    refrac = jnp.array([0, 1, 5, 0], jnp.int32)
+    z = jnp.zeros(4, jnp.float32)
+    big = jnp.full(4, 1e4, jnp.float32)       # drive V far past threshold
+    st_ = NeuronState(V=V, I_ex=z, I_in=z, refrac=refrac)
+    want_state, want_spk = lif_step(st_, prop, big, z, z)
+    got = lif_update_pallas(V, z, z, refrac, big, z, z, prop=prop,
+                            block=128, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got[4]),
+                                  np.asarray(want_spk))
+    np.testing.assert_array_equal(np.asarray(want_spk),
+                                  [True, False, False, False])
+    # refractory countdown and re-entry
+    np.testing.assert_array_equal(np.asarray(got[3]),
+                                  [prop.ref_steps, 0, 4, 0])
+    for a, b in zip(got[:4], want_state):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 # ---------------------------------------------------------- gated matvec
 @pytest.mark.parametrize("shape", [(1, 64, 64), (3, 500, 700), (5, 1024, 513),
                                    (2, 2000, 256)])

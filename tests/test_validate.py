@@ -1,0 +1,388 @@
+"""Paper-fidelity validation subsystem: streaming statistics engine,
+reference checks, ValidationReport, and the RTF benchmark ledger.
+
+Tier-1 covers the math (stream carry == raster oracle == naive numpy),
+the report/ledger plumbing, and the CLI compare exit codes in replay mode;
+the actual 10 s scale-0.1 acceptance run and the measuring CLI live behind
+the ``tier2`` marker.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro import validate as V
+from repro.api import Simulator, spike_stats
+from repro.configs.microcircuit import SMOKE, MicrocircuitConfig
+from repro.validate.report import CheckResult, ValidationReport
+
+CFG = dataclasses.replace(SMOKE, t_presim=0.0)
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# Statistics engine: streaming carry vs oracles
+# ---------------------------------------------------------------------------
+
+def _naive_stats(raster, bin_steps):
+    """Direct numpy reference: CV per neuron + pairwise corr of binned
+    counts, no moment accumulation."""
+    T, ns = raster.shape
+    cvs = np.full(ns, np.nan)
+    for j in range(ns):
+        ts = np.nonzero(raster[:, j])[0]
+        if ts.size >= 3:
+            isi = np.diff(ts)
+            if isi.mean() > 0:
+                cvs[j] = isi.std() / isi.mean()
+    nb = T // bin_steps
+    binned = raster[:nb * bin_steps].reshape(nb, bin_steps, ns).sum(1)
+    corr = np.corrcoef(binned.T) if nb >= 2 else None
+    return cvs, corr
+
+
+def test_raster_accumulator_matches_naive(rng):
+    raster = rng.random((200, 30)) < 0.05
+    acc = V.RasterAccumulator(30, bin_steps=10)
+    acc.update(raster)
+    cvs, corr = _naive_stats(raster, 10)
+    from repro.validate.stats import _corr_matrix, _cv_per_neuron
+    got_cv = _cv_per_neuron(acc.carry, min_spikes=3)
+    np.testing.assert_allclose(got_cv, cvs, rtol=1e-5, equal_nan=True)
+    got_corr = _corr_matrix(acc.carry)
+    mask = np.isfinite(got_corr) & np.isfinite(corr)
+    assert mask.any()
+    np.testing.assert_allclose(got_corr[mask], corr[mask], atol=1e-4)
+
+
+def test_raster_accumulator_chunking_invariant(rng):
+    """Feeding chunks of any size equals one shot (incl. bin alignment)."""
+    raster = rng.random((157, 12)) < 0.08
+    one = V.RasterAccumulator(12, bin_steps=10)
+    one.update(raster)
+    many = V.RasterAccumulator(12, bin_steps=10)
+    for lo, hi in ((0, 31), (31, 32), (32, 100), (100, 157)):
+        many.update(raster[lo:hi])
+    for f in one.carry._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(one.carry, f)),
+                                      np.asarray(getattr(many.carry, f)), f)
+
+
+def test_stream_carry_matches_raster_oracle(small_connectome):
+    """The in-scan device accumulator == host accumulator, bitwise."""
+    ids = V.sample_ids(small_connectome.pop_sizes, per_pop=15, seed=1)
+    probe = spike_stats(ids, bin_steps=10)
+    sim = Simulator(CFG, connectome=small_connectome,
+                    probes=("spikes", probe))
+    res = sim.run(50.0)
+    acc = V.RasterAccumulator(len(ids), bin_steps=10)
+    acc.update(np.asarray(res["spikes"])[:, ids])
+    carry = res.streams["spike_stats"]["carry"]
+    for f in carry._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(carry, f)),
+                                      np.asarray(getattr(acc.carry, f)), f)
+
+
+def test_stream_carry_threads_across_chunks(small_connectome):
+    """run_chunked's final stream snapshot == the single run's (ISIs that
+    span chunk boundaries included)."""
+    ids = V.sample_ids(small_connectome.pop_sizes, per_pop=10, seed=2)
+    probe = spike_stats(ids, bin_steps=10)
+    a = Simulator(CFG, connectome=small_connectome, probes=(probe,))
+    ra = a.run(60.0)
+    b = Simulator(CFG, connectome=small_connectome, probes=(probe,))
+    rb = b.run_chunked(60.0, chunk_ms=17.0)       # uneven chunking
+    ca, cb = ra.streams["spike_stats"]["carry"], \
+        rb.streams["spike_stats"]["carry"]
+    for f in ca._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(ca, f)),
+                                      np.asarray(getattr(cb, f)), f)
+
+
+@pytest.mark.parametrize("backend", ["instrumented", "sharded"])
+def test_stream_probe_on_all_backends(small_connectome, backend):
+    """The chunk-streaming probe is threaded through every backend and
+    produces the fused backend's carry bitwise."""
+    ids = V.sample_ids(small_connectome.pop_sizes, per_pop=10, seed=3)
+    probe = spike_stats(ids, bin_steps=10)
+    want = Simulator(CFG, connectome=small_connectome,
+                     probes=("pop_counts", probe)).run(20.0)
+    got = Simulator(CFG, connectome=small_connectome, backend=backend,
+                    probes=("pop_counts", probe)).run(20.0)
+    cw = want.streams["spike_stats"]["carry"]
+    cg = got.streams["spike_stats"]["carry"]
+    for f in cw._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(cw, f)),
+                                      np.asarray(getattr(cg, f)), f)
+
+
+def test_finalize_known_patterns():
+    """Closed-form cases: clock-like -> CV 0; identical pair -> corr 1."""
+    ns, T = 4, 400
+    raster = np.zeros((T, ns), bool)
+    raster[::10, 0] = True                    # clock-like -> CV 0
+    rng = np.random.default_rng(0)
+    raster[:, 1] = rng.random(T) < 0.05       # Poisson-ish
+    raster[:, 2] = raster[:, 1]               # identical twin -> corr 1
+    acc = V.RasterAccumulator(ns, bin_steps=20)
+    acc.update(raster)
+    stats = V.finalize(acc.carry, ids=np.arange(ns),
+                       pop_of=np.zeros(ns, np.int32), n_pops=1, dt=0.1,
+                       bin_steps=20)
+    from repro.validate.stats import _corr_matrix, _cv_per_neuron
+    cv = _cv_per_neuron(acc.carry, min_spikes=3)
+    np.testing.assert_allclose(cv[0], 0.0, atol=1e-7)    # clock-like
+    assert 0.5 < cv[1] < 1.5                             # Poisson-like
+    assert np.isnan(cv[3])                               # silent
+    assert 0.0 <= stats.cv_isi[0] < 0.8                  # population mean
+    corr = _corr_matrix(acc.carry)
+    np.testing.assert_allclose(corr[1, 2], 1.0, atol=1e-6)
+    # clock neuron: constant bin counts -> zero variance -> undefined
+    assert np.isnan(corr[0, 1])
+    assert stats.n_sampled[0] == ns
+    # neuron 3 never spiked: rate contribution 0, excluded from CV
+    assert stats.n_cv_valid[0] == 3
+
+
+def test_sample_ids_stratified():
+    pop_sizes = [50, 7, 100, 3]
+    ids = V.sample_ids(pop_sizes, per_pop=10, seed=0)
+    offsets = np.concatenate([[0], np.cumsum(pop_sizes)])
+    counts = np.histogram(ids, bins=offsets)[0]
+    np.testing.assert_array_equal(counts, [10, 7, 10, 3])
+    assert len(np.unique(ids)) == len(ids)
+
+
+# ---------------------------------------------------------------------------
+# Reference spec + report
+# ---------------------------------------------------------------------------
+
+def test_reference_spec_bands():
+    spec = V.microcircuit_reference()
+    assert len(spec.rate_hz) == len(spec.populations) == 8
+    from repro.core.params import FULL_MEAN_RATES
+    for band, ref in zip(spec.rate_hz, FULL_MEAN_RATES):
+        assert band.contains(ref)
+        assert band.lo >= 0.0
+    with pytest.raises(ValueError, match="one rate band per population"):
+        V.ReferenceSpec(populations=("a", "b"), rate_hz=(V.Band(0, 1),),
+                        cv_isi=V.Band(0, 1), correlation=V.Band(0, 1),
+                        synchrony=V.Band(0, 1))
+
+
+def test_check_judge_and_report():
+    band = V.Band(1.0, 2.0)
+    assert CheckResult.judge("rate", "L4E", 1.5, band).status == "pass"
+    assert CheckResult.judge("rate", "L4E", 2.5, band).status == "fail"
+    assert CheckResult.judge("rate", "L4E", float("nan"), band
+                             ).status == "skip"
+    rep = ValidationReport(checks=[
+        CheckResult.judge("rate", "L4E", 1.5, band),
+        CheckResult.judge("cv_isi", "L4E", float("nan"), band),
+        CheckResult.judge("rate", "L5E", 9.0, band)])
+    assert not rep.passed and len(rep.failures()) == 1
+    assert rep.by_population() == {"L4E": "skip", "L5E": "fail"}
+    doc = json.loads(rep.to_json())
+    assert doc["schema"].startswith("repro.validation_report/")
+    assert doc["passed"] is False
+    skipped = [c for c in doc["checks"] if c["status"] == "skip"]
+    assert skipped and skipped[0]["value"] is None     # NaN -> null
+    assert "FAIL" in rep.table()
+
+
+def test_validate_smoke_run(small_connectome):
+    """End-to-end on a tiny run: machine-readable verdict per population."""
+    ids = V.sample_ids(small_connectome.pop_sizes, per_pop=20, seed=0)
+    sim = Simulator(CFG, connectome=small_connectome,
+                    probes=("pop_counts", spike_stats(ids, bin_steps=10)))
+    res = sim.run(100.0)
+    rep = res.validate()
+    pops = set(V.microcircuit_reference().populations)
+    assert pops <= set(rep.by_population())
+    metrics = {c.metric for c in rep.checks}
+    assert {"rate", "cv_isi", "correlation", "synchrony"} <= metrics
+    # 8 pops x 3 per-pop metrics + 1 network-wide synchrony
+    assert len(rep.checks) == 25
+    assert rep.meta["n_steps"] == res.n_steps
+
+
+def test_validate_from_full_raster(small_connectome):
+    """Runs that recorded a dense raster validate through the same math
+    (stratified-subsampled, so the correlation accumulator stays small)."""
+    sim = Simulator(CFG, connectome=small_connectome,
+                    probes=("pop_counts", "spikes"))
+    res = sim.run(50.0)
+    rep = V.validate(res)
+    assert any(c.metric == "cv_isi" for c in rep.checks)
+    want = sum(min(100, int(s)) for s in small_connectome.pop_sizes)
+    assert rep.meta["n_sampled"] == want
+
+
+def test_validate_finds_renamed_stream_probe(small_connectome):
+    """A spike_stats probe with a custom name still feeds validate()."""
+    ids = V.sample_ids(small_connectome.pop_sizes, per_pop=10, seed=4)
+    sim = Simulator(CFG, connectome=small_connectome,
+                    probes=("pop_counts",
+                            spike_stats(ids, bin_steps=10, name="my_stats")))
+    rep = V.validate(sim.run(30.0))
+    assert rep.meta.get("n_sampled") == len(ids)
+
+
+def test_cv_isi_stays_linear_memory():
+    """recording.cv_isi must not allocate the [N, N] correlation moment."""
+    from repro.core import recording
+    rng = np.random.default_rng(0)
+    raster = rng.random((50, 20)) < 0.2
+    acc = V.RasterAccumulator(20, bin_steps=50, correlation=False)
+    acc.update(raster)
+    assert acc.carry.bin_outer.shape == (0, 0)
+    cv = recording.cv_isi(raster)
+    assert np.isfinite(cv)
+
+
+def test_restore_resets_stream_state(small_connectome, tmp_path):
+    """Checkpoints exclude stream carries; a restore restarts them empty
+    (post-restore window only — never stale or double-counted)."""
+    ids = V.sample_ids(small_connectome.pop_sizes, per_pop=5, seed=5)
+    probe = spike_stats(ids, bin_steps=10)
+    d = str(tmp_path / "ckpt")
+    sim = Simulator(CFG, connectome=small_connectome, probes=(probe,))
+    sim.run(10.0)
+    sim.save(d)
+    sim.run(10.0)                      # would-be-stale accumulation
+    sim.restore(d)
+    res = sim.run(10.0)
+    assert int(res.streams["spike_stats"]["carry"].steps) == 100
+
+
+def test_validate_requires_activity_source(small_connectome):
+    sim = Simulator(CFG, connectome=small_connectome, probes=("voltage",))
+    res = sim.run(2.0)
+    with pytest.raises(ValueError, match="spike_stats"):
+        V.validate(res)
+
+
+# ---------------------------------------------------------------------------
+# RTF benchmark ledger
+# ---------------------------------------------------------------------------
+
+def _ledger(entries, device="cpu"):
+    from benchmarks.common import BENCH_SCHEMA
+    return {"schema": BENCH_SCHEMA,
+            "machine": {"device_kind": device, "backend": device},
+            "entries": entries}
+
+
+def test_compare_ledgers_flags_regressions():
+    from benchmarks.common import compare_ledgers
+    base = _ledger([{"name": "rtf/event/scale0.02", "rtf": 10.0},
+                    {"name": "rtf/ell/scale0.02", "rtf": 10.0},
+                    {"name": "rtf/gone", "rtf": 1.0}])
+    cur = _ledger([{"name": "rtf/event/scale0.02", "rtf": 14.9},  # within
+                   {"name": "rtf/ell/scale0.02", "rtf": 15.1},    # beyond
+                   {"name": "rtf/new", "rtf": 99.0}])             # unmatched
+    regs = compare_ledgers(base, cur, rtol=0.5)
+    assert [r["name"] for r in regs] == ["rtf/ell/scale0.02"]
+    assert regs[0]["ratio"] == pytest.approx(1.51)
+    assert not regs[0]["machine_differs"]
+    assert compare_ledgers(base, cur, rtol=0.6) == []
+    regs2 = compare_ledgers(_ledger(base["entries"], device="tpu"), cur,
+                            rtol=0.5)
+    assert regs2[0]["machine_differs"]
+
+
+def test_ledger_round_trip(tmp_path):
+    from benchmarks import common
+    path = str(tmp_path / "L.json")
+    common.write_ledger(path, [{"name": "x", "rtf": 1.0}])
+    doc = common.load_ledger(path)
+    assert doc["entries"][0]["name"] == "x"
+    assert doc["machine"]["backend"]
+    with open(path, "w") as f:
+        json.dump({"schema": "other/v9"}, f)
+    with pytest.raises(ValueError, match="unknown ledger schema"):
+        common.load_ledger(path)
+
+
+def _run_cli(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(REPO, "src"), REPO,
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    return subprocess.run(
+        [sys.executable, os.path.join(REPO, "benchmarks", "table1_rtf.py"),
+         *args], capture_output=True, text=True, env=env, cwd=REPO)
+
+
+def test_cli_compare_exit_codes(tmp_path):
+    """--compare exits 0 on a clean replay and 3 on an injected
+    regression against the committed BENCH_rtf.json."""
+    committed = os.path.join(REPO, "BENCH_rtf.json")
+    assert os.path.exists(committed), \
+        "the reference ledger BENCH_rtf.json must be committed"
+    ok = _run_cli("--replay", committed, "--compare", committed)
+    assert ok.returncode == 0, ok.stderr
+    # inject a regression: every current RTF 10x the committed baseline
+    with open(committed) as f:
+        doc = json.load(f)
+    for e in doc["entries"]:
+        e["rtf"] *= 10.0
+    slow = str(tmp_path / "slow.json")
+    with open(slow, "w") as f:
+        json.dump(doc, f)
+    bad = _run_cli("--replay", slow, "--compare", committed)
+    assert bad.returncode == 3, (bad.stdout, bad.stderr)
+    assert "REGRESSION" in bad.stderr
+    missing = _run_cli("--replay", committed, "--compare",
+                       str(tmp_path / "nope.json"))
+    assert missing.returncode == 2
+
+
+# ---------------------------------------------------------------------------
+# Tier-2: the acceptance-scale run + the measuring CLI
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier2
+def test_validation_at_acceptance_scale():
+    """The ISSUE acceptance check: validate() on a 10 s scale-0.1 run
+    yields per-population rate / CV-ISI / correlation verdicts that pass
+    the reference bands (streamed statistics, chunked run)."""
+    from repro.core import build_connectome
+    cfg = MicrocircuitConfig(scale=0.1, t_presim=100.0, seed=55)
+    c = build_connectome(scale=0.1, seed=55)
+    ids = V.sample_ids(c.pop_sizes, per_pop=50, seed=0)
+    sim = Simulator(cfg, connectome=c,
+                    probes=("pop_counts", spike_stats(ids, bin_steps=20)))
+    res = sim.run_chunked(10_000.0, chunk_ms=1_000.0)
+    rep = res.validate()
+    assert {"rate", "cv_isi", "correlation", "synchrony"} <= \
+        {c.metric for c in rep.checks}
+    by_pop = rep.by_population()
+    assert set(V.microcircuit_reference().populations) <= set(by_pop)
+    assert rep.passed, rep.table()
+
+
+@pytest.mark.tier2
+def test_cli_sweep_measures_and_compares(tmp_path):
+    """The measuring CLI writes a schema-versioned ledger and the compare
+    gate fires on an injected regression of the fresh measurement."""
+    out = str(tmp_path / "new.json")
+    r = _run_cli("--sweep", "--scales", "0.02", "--strategies", "event",
+                 "--t-sim", "50", "--out", out)
+    assert r.returncode == 0, r.stderr
+    from benchmarks import common
+    doc = common.load_ledger(out)
+    assert doc["entries"][0]["name"] == "rtf/event/scale0.02"
+    assert doc["entries"][0]["rtf"] > 0
+    # a baseline claiming to be much faster must trip the gate
+    fast = {**doc, "entries": [{**e, "rtf": e["rtf"] / 10}
+                               for e in doc["entries"]]}
+    fast_path = str(tmp_path / "fast.json")
+    with open(fast_path, "w") as f:
+        json.dump(fast, f)
+    bad = _run_cli("--replay", out, "--compare", fast_path)
+    assert bad.returncode == 3
