@@ -16,7 +16,10 @@ import platform
 import time
 from typing import Dict, List, Optional
 
-BENCH_SCHEMA = "repro.bench_rtf/v1"
+BENCH_SCHEMA = "repro.bench_rtf/v2"
+# v1 ledgers (no per-trial fields) load and compare fine; v2 adds
+# n_trials / rtf_mean / rtf_std to multi-trial entries
+_ACCEPTED_SCHEMAS = ("repro.bench_rtf/v1", BENCH_SCHEMA)
 
 
 def time_sim(sim, t_model_ms: float, presim_ms: float = 0.0):
@@ -29,6 +32,17 @@ def time_sim(sim, t_model_ms: float, presim_ms: float = 0.0):
     sim.warmup(t_model_ms)
     sim.reset()
     return sim.run(t_model_ms, presim_ms=presim_ms)
+
+
+def time_sim_batch(sim, t_model_ms: float, n_trials: int):
+    """Measure a ``run_batch`` of ``n_trials`` with compilation excluded.
+
+    Returns the :class:`repro.api.BatchResult`; per-trial RTFs are
+    throughput shares when the backend ran the batch as one vmapped
+    device program (see ``BatchResult``).
+    """
+    sim.warmup_batch(t_model_ms, n_trials)
+    return sim.run_batch(t_model_ms, n_trials)
 
 
 def fmt_row(name: str, us: float, derived: str) -> str:
@@ -56,7 +70,27 @@ def machine_metadata() -> Dict:
 
 def make_entry(name: str, *, strategy: str, scale: float, result,
                connectome) -> Dict:
-    """One ledger row from a ``RunResult`` (see ``time_sim``)."""
+    """One ledger row from a ``RunResult`` or ``BatchResult``.
+
+    Multi-trial entries keep ``rtf`` as the across-trial mean (so v1
+    consumers and ``compare_ledgers`` read them unchanged) and add the
+    v2 fields ``n_trials`` / ``rtf_mean`` / ``rtf_std``.
+    """
+    if hasattr(result, "trials"):        # BatchResult
+        return {
+            "name": name, "strategy": strategy, "scale": scale,
+            "rtf": result.rtf_mean,
+            "wall_s": result.wall_s,
+            "t_model_ms": sum(r.t_model_ms for r in result.trials),
+            "n_steps": sum(r.n_steps for r in result.trials),
+            "n_neurons": int(connectome.n_total),
+            "n_synapses": int(connectome.n_synapses),
+            "overflow": int(sum(r.overflow for r in result.trials)),
+            "n_trials": len(result.trials),
+            "rtf_mean": result.rtf_mean,
+            "rtf_std": result.rtf_std,
+            "vmapped": bool(result.vmapped),
+        }
     return {
         "name": name,
         "strategy": strategy,
@@ -93,10 +127,10 @@ def load_ledger(path: str) -> Dict:
     with open(path) as f:
         doc = json.load(f)
     schema = doc.get("schema")
-    if schema != BENCH_SCHEMA:
+    if schema not in _ACCEPTED_SCHEMAS:
         raise ValueError(
             f"{path}: unknown ledger schema {schema!r} "
-            f"(expected {BENCH_SCHEMA!r}); regenerate with "
+            f"(accepted: {list(_ACCEPTED_SCHEMAS)}); regenerate with "
             f"benchmarks/table1_rtf.py --sweep --out {path}")
     return doc
 

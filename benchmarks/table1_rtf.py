@@ -120,11 +120,15 @@ def print_table():
         print(r)
 
 
-def run_sweep(scales, strategies, t_sim_ms: float, seed: int = 3):
+def run_sweep(scales, strategies, t_sim_ms: float, seed: int = 3,
+              trials: int = 1):
     """Measure RTF for every strategy x scale cell; returns ledger entries.
 
     The connectome is built once per scale and shared across strategies so
     the sweep measures delivery mechanisms, not instantiation noise.
+    ``trials > 1`` runs each cell through ``Simulator.run_batch`` (one
+    vmapped device program on the fused backend) and records the
+    per-trial RTF mean/std in the v2 ledger fields.
     """
     from repro.core.connectivity import build_connectome
     entries = []
@@ -135,12 +139,20 @@ def run_sweep(scales, strategies, t_sim_ms: float, seed: int = 3):
             cfg = MicrocircuitConfig(scale=scale, strategy=strategy,
                                      seed=seed, t_presim=0.0)
             sim = Simulator(cfg, connectome=c)
-            res = time_sim(sim, t_sim_ms)
+            if trials > 1:
+                res = common.time_sim_batch(sim, t_sim_ms, trials)
+                derived = (f"rtf={res.rtf_mean:.3f};"
+                           f"rtf_std={res.rtf_std:.3f};"
+                           f"trials={trials};wall_s={res.wall_s:.2f}")
+                rtf = res.rtf_mean
+            else:
+                res = time_sim(sim, t_sim_ms)
+                derived = f"rtf={res.rtf:.3f};wall_s={res.wall_s:.2f}"
+                rtf = res.rtf
             entry = common.make_entry(name, strategy=strategy, scale=scale,
                                       result=res, connectome=c)
             entries.append(entry)
-            print(fmt_row(name, res.rtf * 1e6,
-                          f"rtf={res.rtf:.3f};wall_s={res.wall_s:.2f}"))
+            print(fmt_row(name, rtf * 1e6, derived))
     return entries
 
 
@@ -154,6 +166,10 @@ def main(argv=None) -> int:
                     help="comma-separated delivery strategies for --sweep")
     ap.add_argument("--t-sim", type=float, default=200.0,
                     help="model time per sweep cell (ms)")
+    ap.add_argument("--trials", type=int, default=1,
+                    help="trials per sweep cell via Simulator.run_batch "
+                         "(vmapped on the fused backend); ledger entries "
+                         "gain rtf_mean/rtf_std")
     ap.add_argument("--seed", type=int, default=3)
     ap.add_argument("--out", default=None, metavar="PATH",
                     help="write the measured sweep as a ledger JSON")
@@ -179,8 +195,10 @@ def main(argv=None) -> int:
     else:
         scales = [float(s) for s in args.scales.split(",") if s]
         strategies = [s for s in args.strategies.split(",") if s]
-        entries = run_sweep(scales, strategies, args.t_sim, seed=args.seed)
-        meta = {"t_sim_ms": args.t_sim, "seed": args.seed}
+        entries = run_sweep(scales, strategies, args.t_sim, seed=args.seed,
+                            trials=args.trials)
+        meta = {"t_sim_ms": args.t_sim, "seed": args.seed,
+                "trials": args.trials}
         if args.out:
             current = common.write_ledger(args.out, entries, meta=meta)
             print(f"ledger written: {args.out} ({len(entries)} entries)")

@@ -1,25 +1,26 @@
-"""Quickstart: simulate a down-scaled cortical microcircuit in 20 lines.
+"""Quickstart: declare and run a microcircuit experiment in 20 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
-
-from repro.api import Simulator
+from repro.api import Experiment
 from repro.configs.microcircuit import MicrocircuitConfig
 
 # 5 % of the full network (77k neurons / 300M synapses at scale 1.0),
 # with van-Albada DC compensation so firing rates stay realistic.
-cfg = MicrocircuitConfig(scale=0.05,          # n & k scaling in one knob
-                         seed=55,
-                         strategy="event",    # delivery: event | dense | ell
-                         spike_budget=None,   # rate-derived auto capacity
-                         t_presim=100.0)      # discarded startup transient
+exp = Experiment(
+    model=MicrocircuitConfig(scale=0.05,        # n & k scaling in one knob
+                             seed=55,
+                             strategy="event",  # delivery: event|dense|ell
+                             t_presim=100.0),   # discarded transient
+    stimulus=("poisson_background",),           # the paper's default drive
+    probes=("pop_counts",),
+    duration_ms=500.0,                          # 0.5 s of model time
+    name="quickstart")
 
-sim = Simulator(cfg, probes=("pop_counts",))
-c = sim.connectome
+result = exp.run()                              # -> ExperimentResult
+res = result.trials[0]
+c = result.connectome
 print(f"network: {c.n_total} neurons, {c.n_synapses} synapses")
-
-res = sim.run(500.0)                          # 0.5 s of model time
 
 summary = res.summary()
 print(f"RTF = {res.rtf:.2f} (wall {res.wall_s:.1f}s incl. compile)")
@@ -29,3 +30,7 @@ for pop, rate, target in zip(
         summary["rates_hz"], summary["target_rates_hz"]):
     print(f"  {pop:5s} {rate:6.2f}  (full-scale reference {target:.2f})")
 print(f"spike-budget overflows: {res.overflow} (must be 0)")
+
+# the same experiment serializes to a shareable scenario file:
+#   exp.to_json("my_scenario.json")
+#   PYTHONPATH=src python -m repro.api my_scenario.json

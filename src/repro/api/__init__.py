@@ -11,16 +11,22 @@ recording.
 from repro.api.backends import (Backend, FusedBackend, InstrumentedBackend,
                                 ShardedBackend, make_backend)
 from repro.core.delivery import DeliveryOverflowError
+from repro.api.experiment import Experiment, ExperimentResult
 from repro.api.probes import (Probe, ProbeContext, StreamProbe, custom,
                               mean_plastic_weight, pop_counts, spike_stats,
                               spikes, total_counts, voltage)
-from repro.api.results import RunResult
+from repro.api.results import BatchResult, RunResult
 from repro.api.simulator import Simulator
+from repro.core.stimulus import (DCInput, PoissonBackground, StepCurrent,
+                                 Stimulus, ThalamicPulses)
 
 __all__ = [
-    "Simulator", "RunResult", "DeliveryOverflowError",
+    "Simulator", "RunResult", "BatchResult", "DeliveryOverflowError",
+    "Experiment", "ExperimentResult",
     "Backend", "FusedBackend", "InstrumentedBackend", "ShardedBackend",
     "make_backend",
     "Probe", "ProbeContext", "StreamProbe", "custom", "mean_plastic_weight",
     "pop_counts", "spike_stats", "spikes", "total_counts", "voltage",
+    "Stimulus", "PoissonBackground", "DCInput", "StepCurrent",
+    "ThalamicPulses",
 ]

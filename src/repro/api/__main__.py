@@ -1,0 +1,10 @@
+"""Scenario-runner entry point: ``python -m repro.api scenario.json``.
+
+A separate ``__main__`` module (rather than running ``repro.api.
+experiment`` itself) so the CLI reuses the class objects the package
+already imported instead of re-executing the module under a second name.
+Exit code 4 signals a failing validation report (the CI smoke gate).
+"""
+from repro.api.experiment import main
+
+raise SystemExit(main())

@@ -41,6 +41,7 @@ import numpy as np
 from repro.api.probes import Probe, ProbeContext, StreamProbe, split_probes
 from repro.core import delivery as dlv
 from repro.core import distributed as DD
+from repro.core import stimulus as stim
 from repro.core.connectivity import Connectome
 from repro.core.engine import (SimConfig, SimState, deliver_phase, init_state,
                                prepare_network, resolve_sim_config,
@@ -72,6 +73,58 @@ class Backend:
         the Simulator threads carries across chunks this way.
         """
         raise NotImplementedError
+
+    def run_batch(self, states, n_steps: int, probes: Sequence[Probe],
+                  stream: Optional[Dict[str, Any]] = None
+                  ) -> Tuple[Any, Dict[str, jnp.ndarray], Optional[list]]:
+        """Advance ``n_trials`` independent states (leading trial axis).
+
+        ``states`` is a pytree whose leaves carry a leading trial axis
+        (``jax.vmap``-style batching of ``init``); ``stream`` carries are
+        batched the same way.  Returns ``(states', data, walls)`` with
+        every ``data`` array gaining a leading trial axis; ``walls`` is
+        the list of measured per-trial wall seconds, or ``None`` when the
+        trials ran concurrently (one vmapped program has no per-trial
+        latency).
+
+        Default implementation: sequential per-trial ``run`` calls (the
+        honest fallback for per-step-dispatch and sharded engines — the
+        device mesh is already busy with one trial).  The fused backend
+        overrides this with a single vmapped device program.
+        """
+        n_trials = jax.tree.leaves(states)[0].shape[0]
+        probes = tuple(probes)
+        _, stream_probes = split_probes(probes)
+        out_states, out_data, walls = [], [], []
+        for i in range(n_trials):
+            st_i = jax.tree.map(lambda x: x[i], states)
+            stream_i = None
+            if stream is not None:
+                stream_i = {
+                    name: (None if carry is None
+                           else jax.tree.map(lambda x: x[i], carry))
+                    for name, carry in stream.items()}
+            t0 = time.perf_counter()
+            st_i, data_i = self.run(st_i, n_steps, probes, stream=stream_i)
+            jax.block_until_ready(st_i)
+            walls.append(time.perf_counter() - t0)
+            out_states.append(st_i)
+            out_data.append(data_i)
+        states = jax.tree.map(lambda *xs: jnp.stack(xs), *out_states)
+        data = {k: jax.tree.map(lambda *xs: jnp.stack(xs),
+                                *[d[k] for d in out_data])
+                for k in out_data[0]}
+        return states, data, walls
+
+    def warmup_batch(self, states, n_steps: int,
+                     probes: Sequence[Probe]) -> None:
+        """Compile the batch program; must not mutate ``states``.
+
+        Default: per-trial ``warmup`` on trial 0's state (the sequential
+        fallback dispatches per trial, so one compiled trial warms all).
+        """
+        st0 = jax.tree.map(lambda x: x[0], states)
+        self.warmup(st0, n_steps, tuple(probes))
 
     @staticmethod
     def _stream_carries(stream_probes, stream):
@@ -112,13 +165,16 @@ class FusedBackend(Backend):
         self.stdp = stdp
         self._cache: Dict[Any, Any] = {}
         self._aot: Dict[Any, Any] = {}
+        self._batch_cache: Dict[Any, Any] = {}
 
     def build(self, c, cfg, neuron=None):
         cfg = resolve_sim_config(cfg, c)    # auto spike budget, name check
         self.c, self.cfg = c, cfg
-        self.prop = Propagators.make(neuron or NeuronParams(), cfg.dt)
+        neuron = neuron or NeuronParams()
+        self.prop = Propagators.make(neuron, cfg.dt)
         self.net = prepare_network(c, cfg)
         self.n_pops = len(c.pop_sizes)
+        self.drive = stim.compile_drive(cfg.stimulus, c, cfg, neuron)
         self._plastic_tables = None
         if self.stdp is not None:
             from repro.core import plasticity as PL
@@ -164,11 +220,68 @@ class FusedBackend(Backend):
         data.update(zip((p.name for p in stream_probes), carries))
         return state, data
 
+    def _batch_carries(self, stream_probes, stream, n_trials):
+        if stream is not None:
+            return tuple(stream[p.name] for p in stream_probes)
+        return tuple(
+            jax.tree.map(lambda x: jnp.broadcast_to(
+                x[None], (n_trials,) + x.shape), p.init())
+            for p in stream_probes)
+
+    def _batched(self, n_steps: int, probes):
+        key = (n_steps, probes)
+        if key not in self._batch_cache:
+            runner = self._runner(n_steps, probes)
+            n_net_args = 2 if self.stdp is not None else 1
+            in_axes = (0,) + (None,) * n_net_args + (0,)
+            self._batch_cache[key] = jax.jit(jax.vmap(runner,
+                                                      in_axes=in_axes))
+        return self._batch_cache[key]
+
+    def warmup_batch(self, states, n_steps, probes):
+        # AOT lower+compile, like warmup(): no execution, so warming a
+        # long multi-trial program costs compile time only
+        probes = tuple(probes)
+        n_trials = jax.tree.leaves(states)[0].shape[0]
+        key = (n_trials, n_steps, probes)
+        if key not in self._aot:
+            fn = self._batched(n_steps, probes)
+            _, stream_probes = split_probes(probes)
+            carries = self._batch_carries(stream_probes, None, n_trials)
+            self._aot[key] = fn.lower(*self._args(states),
+                                      carries).compile()
+
+    def run_batch(self, states, n_steps, probes, stream=None):
+        """Vmapped multi-trial execution: one device program, all trials.
+
+        ``states``/``stream`` leaves carry a leading trial axis; network
+        tables stay unbatched (in_axes ``None``), so the compiled program
+        shares them across trials.  Returns ``walls=None``: trials run
+        concurrently, so no per-trial latency exists.
+        """
+        probes = tuple(probes)
+        step_probes, stream_probes = split_probes(probes)
+        n_trials = jax.tree.leaves(states)[0].shape[0]
+        carries = self._batch_carries(stream_probes, stream, n_trials)
+        fn = self._aot.get((n_trials, n_steps, probes)) \
+            or self._batched(n_steps, probes)
+        states, carries, outs = fn(*self._args(states), carries)
+        data = dict(zip((p.name for p in step_probes), outs))
+        data.update(zip((p.name for p in stream_probes), carries))
+        return states, data, None
+
     def _compiled(self, n_steps: int, probes):
         key = (n_steps, probes)
         if key in self._cache:
             return self._cache[key]
-        c, cfg, prop = self.c, self.cfg, self.prop
+        fn = jax.jit(self._runner(n_steps, probes))
+        self._cache[key] = fn
+        return fn
+
+    def _runner(self, n_steps: int, probes):
+        """The raw (unjitted) scan runner — ``run`` jits it as-is,
+        ``run_batch`` wraps it in ``jax.vmap`` first."""
+        c, cfg, prop, drive = self.c, self.cfg, self.prop, self.drive
         n, n_exc, n_pops = c.n_total, c.n_exc, self.n_pops
         step_probes, stream_probes = split_probes(probes)
 
@@ -177,7 +290,7 @@ class FusedBackend(Backend):
                 def step(carry, _):
                     sim, scs = carry
                     sim, spiked = update_phase(sim, net, prop, cfg,
-                                               c.w_ext, n)
+                                               c.w_ext, n, drive)
                     sim = deliver_phase(sim, net, cfg, spiked, n_exc)
                     scs = tuple(p.update(sc, spiked)
                                 for p, sc in zip(stream_probes, scs))
@@ -196,7 +309,7 @@ class FusedBackend(Backend):
                 def step(carry, _):
                     (sim, ps), scs = carry
                     sim, spiked = update_phase(sim, net, prop, cfg,
-                                               c.w_ext, n)
+                                               c.w_ext, n, drive)
                     live = dlv.EventTables(
                         targets=tables.out_targets,
                         weights=PL.plastic_weight_view(ps, n, k_out),
@@ -217,9 +330,7 @@ class FusedBackend(Backend):
                     step, (state, carries), None, length=n_steps)
                 return state, carries, outs
 
-        fn = jax.jit(runner)
-        self._cache[key] = fn
-        return fn
+        return runner
 
 
 # ---------------------------------------------------------------------------
@@ -244,11 +355,13 @@ class InstrumentedBackend(Backend):
     def build(self, c, cfg, neuron=None):
         cfg = resolve_sim_config(cfg, c)
         self.c, self.cfg = c, cfg
-        self.prop = Propagators.make(neuron or NeuronParams(), cfg.dt)
+        neuron = neuron or NeuronParams()
+        self.prop = Propagators.make(neuron, cfg.dt)
         self.net = prepare_network(c, cfg)
         self.n_pops = len(c.pop_sizes)
+        self.drive = stim.compile_drive(cfg.stimulus, c, cfg, neuron)
         self._update = jax.jit(lambda s: update_phase(
-            s, self.net, self.prop, cfg, c.w_ext, c.n_total))
+            s, self.net, self.prop, cfg, c.w_ext, c.n_total, self.drive))
         self._deliver = jax.jit(lambda s, spk: deliver_phase(
             s, self.net, cfg, spk, c.n_exc))
         self._record_cache: Dict[Any, Any] = {}
@@ -371,7 +484,14 @@ class ShardedBackend(Backend):
                 f"transform (ELL layout); {cfg.strategy!r} provides none — "
                 f"use strategy='event' or 'ell'")
         self.c, self.cfg = c, cfg
-        self.prop = Propagators.make(neuron or NeuronParams(), cfg.dt)
+        neuron = neuron or NeuronParams()
+        self.prop = Propagators.make(neuron, cfg.dt)
+        self.drive = stim.compile_drive(cfg.stimulus, c, cfg, neuron)
+        if not self.drive.separable:
+            raise NotImplementedError(
+                "the sharded backend supports separable stimuli only "
+                "(basis x time-gate form, as all built-ins are); run "
+                "general custom stimuli on the fused backend")
         n_dev = self.n_devices or len(jax.devices())
         if n_dev > len(jax.devices()):
             raise ValueError(f"n_devices={n_dev} > available "
@@ -381,6 +501,8 @@ class ShardedBackend(Backend):
         self.mesh = make_mesh_auto((n_dev,), ("flat",))
         self.tables, self.meta = strategy.localize(c, n_dev)
         self.n_pops = len(c.pop_sizes)
+        spike_b, cur_b = self.drive.padded_bases(self.meta["n_pad"])
+        self._drive_bases = (jnp.asarray(spike_b), jnp.asarray(cur_b))
         # global population index padded with a sentinel population so the
         # in-scan segment_sum can drop the padding neurons
         pop_of = np.full(self.meta["n_pad"], self.n_pops, np.int32)
@@ -397,8 +519,8 @@ class ShardedBackend(Backend):
             fn = self._compiled(n_steps, stream_probes)
             carries = self._stream_carries(stream_probes, None)
             with self.mesh:
-                self._aot[key] = fn.lower(state, self.tables,
-                                          carries).compile()
+                self._aot[key] = fn.lower(state, self.tables, carries,
+                                          self._drive_bases).compile()
 
     def init(self, key):
         c, meta, n_dev = self.c, self.meta, self.n_dev
@@ -433,7 +555,8 @@ class ShardedBackend(Backend):
         fn = self._aot.get((n_steps, stream_probes)) \
             or self._compiled(n_steps, stream_probes)
         with self.mesh:
-            state, pop_counts, carries = fn(state, self.tables, carries)
+            state, pop_counts, carries = fn(state, self.tables, carries,
+                                            self._drive_bases)
         data = {}
         for p in step_probes:
             if p.name == "pop_counts":
@@ -449,7 +572,7 @@ class ShardedBackend(Backend):
             c, cfg = self.c, self.cfg
             sim = DD.make_sharded_step(
                 self.mesh, self.meta, self.prop, n_exc=c.n_exc,
-                w_ext=c.w_ext, bg_rate=cfg.bg_rate, dt=cfg.dt,
+                w_ext=c.w_ext, drive=self.drive, dt=cfg.dt,
                 spike_budget=cfg.spike_budget, n_steps=n_steps,
                 pop_of=self.pop_of, n_pops=self.n_pops,
                 stream_probes=stream_probes)

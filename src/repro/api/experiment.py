@@ -1,0 +1,277 @@
+"""Declarative experiments: serializable scenario specs over the Simulator.
+
+An :class:`Experiment` is the shareable unit of scientific work on the
+microcircuit: a model config, a stimulus timeline, probes, a duration, a
+trial count and an optional validation gate — everything a Potjans–
+Diesmann protocol (background-only ground state, DC-driven control,
+thalamic pulse stimulation, multi-trial statistics) needs, as *data*.
+``to_dict``/``from_dict`` round-trip through the JSON schema
+``repro.experiment/v1`` so scenarios live in version control
+(``examples/scenarios/*.json``) and run verbatim anywhere::
+
+    from repro.api import Experiment
+
+    exp = Experiment.from_json("examples/scenarios/thalamic_l4.json")
+    result = exp.run()
+    print(result.batch.rtf_mean, result.report and result.report.table())
+
+``experiment.run()`` drives a :class:`~repro.api.simulator.Simulator`
+(``run_batch`` for ``trials > 1`` — vmapped on the fused backend) and
+returns an :class:`ExperimentResult` bundling the per-trial
+``RunResult``\\ s with the across-trial :class:`ValidationReport` when
+``validate`` is set.
+
+The module doubles as the scenario CLI used by the CI smoke gate::
+
+    PYTHONPATH=src python -m repro.api examples/scenarios/x.json
+
+(exit code 4 on a failing validation report).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import List, Optional, Sequence, Tuple
+
+from repro.api.results import BatchResult, RunResult
+from repro.configs.microcircuit import MicrocircuitConfig
+from repro.core import stimulus as stimulus_mod
+
+SCHEMA = "repro.experiment/v1"
+
+_MODEL_FIELDS = {f.name for f in dataclasses.fields(MicrocircuitConfig)}
+
+
+def _model_from_dict(d: dict) -> MicrocircuitConfig:
+    unknown = set(d) - _MODEL_FIELDS
+    if unknown:
+        raise ValueError(f"unknown model field(s) {sorted(unknown)} "
+                         f"(known: {sorted(_MODEL_FIELDS)})")
+    return MicrocircuitConfig(**d)
+
+
+@dataclasses.dataclass(frozen=True)
+class Experiment:
+    """A declarative, serializable simulation experiment.
+
+    ``stimulus`` entries may be registry kind names, spec dicts, or
+    :class:`~repro.core.stimulus.Stimulus` instances; an empty timeline
+    means the model default (the paper's 8 Hz Poisson background).
+    ``validate`` adds a streaming ``spike_stats`` probe (``sample_per_pop``
+    neurons per population) and judges the run — pooled across trials —
+    against the published microcircuit bands.
+    """
+    model: MicrocircuitConfig = dataclasses.field(
+        default_factory=MicrocircuitConfig)
+    stimulus: Tuple = ()
+    probes: Tuple[str, ...] = ("pop_counts",)
+    duration_ms: float = 1000.0
+    trials: int = 1
+    validate: bool = False
+    backend: str = "fused"
+    sample_per_pop: int = 100
+    name: str = ""
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "stimulus",
+            stimulus_mod.resolve_timeline(self.stimulus) if self.stimulus
+            else ())
+        object.__setattr__(self, "probes", tuple(self.probes))
+        if int(self.trials) < 1:
+            raise ValueError(f"trials must be >= 1, got {self.trials}")
+
+    # -- serialization (schema repro.experiment/v1) -------------------------
+
+    def to_dict(self) -> dict:
+        for p in self.probes:
+            if not isinstance(p, str):
+                raise ValueError(
+                    f"only named probes serialize; got {type(p)} — keep "
+                    f"callable probes for in-process Simulator use")
+        if getattr(self.model, "stimulus", None) is not None:
+            raise ValueError("serialize the timeline on Experiment."
+                             "stimulus, not on the model config")
+        model = dataclasses.asdict(self.model)
+        model.pop("stimulus", None)
+        return {
+            "schema": SCHEMA,
+            "name": self.name,
+            "model": model,
+            "stimulus": [s.to_dict() for s in self.stimulus],
+            "probes": list(self.probes),
+            "duration_ms": float(self.duration_ms),
+            "trials": int(self.trials),
+            "validate": bool(self.validate),
+            "backend": self.backend,
+            "sample_per_pop": int(self.sample_per_pop),
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Experiment":
+        d = dict(d)
+        schema = d.pop("schema", None)
+        if schema != SCHEMA:
+            raise ValueError(f"unknown experiment schema {schema!r} "
+                             f"(expected {SCHEMA!r})")
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown experiment field(s) "
+                             f"{sorted(unknown)} (known: {sorted(known)})")
+        if "model" in d:
+            d["model"] = _model_from_dict(dict(d["model"]))
+        if "stimulus" in d:
+            d["stimulus"] = tuple(
+                stimulus_mod.Stimulus.from_dict(s) for s in d["stimulus"])
+        if "probes" in d:
+            d["probes"] = tuple(d["probes"])
+        return cls(**d)
+
+    def to_json(self, path: Optional[str] = None, indent: int = 2) -> str:
+        s = json.dumps(self.to_dict(), indent=indent)
+        if path is not None:
+            with open(path, "w") as f:
+                f.write(s + "\n")
+        return s
+
+    @classmethod
+    def from_json(cls, path: str) -> "Experiment":
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
+
+    # -- execution ----------------------------------------------------------
+
+    def make_simulator(self, connectome=None, **sim_kwargs):
+        """Build the :class:`Simulator` session this experiment declares
+        (model + stimulus + probes, with the streaming ``spike_stats``
+        validation probe appended when ``validate`` is set).
+
+        ``run`` uses this internally; callers needing session-level
+        control (``run_chunked``, checkpointing) drive the returned
+        simulator directly — ``examples/microcircuit_sim.py --chunk``
+        does exactly that.
+        """
+        from repro import validate as V
+        from repro.api.probes import spike_stats
+        from repro.api.simulator import Simulator
+        from repro.core.connectivity import build_connectome
+
+        model = self.model
+        if connectome is None:
+            connectome = build_connectome(
+                scale=getattr(model, "scale", None),
+                n_scaling=model.n_scaling, k_scaling=model.k_scaling,
+                seed=int(model.seed), dt=model.dt)
+        probes: List = list(self.probes)
+        if self.validate:
+            ids = V.sample_ids(connectome.pop_sizes,
+                               per_pop=self.sample_per_pop,
+                               seed=int(model.seed))
+            probes.append(
+                spike_stats(ids, bin_steps=max(1, round(2.0 / model.dt))))
+        return Simulator(model, connectome=connectome,
+                         backend=self.backend, probes=probes,
+                         stimulus=self.stimulus or None, **sim_kwargs)
+
+    def run(self, *, connectome=None, warmup: bool = False,
+            **sim_kwargs) -> "ExperimentResult":
+        """Instantiate, simulate ``trials`` x ``duration_ms``, validate.
+
+        ``connectome`` reuses a pre-built network (trial sweeps over one
+        instantiation); ``warmup=True`` compiles before the timed phase
+        so the reported RTF excludes compilation; ``sim_kwargs`` forward
+        to the :class:`Simulator` (e.g. ``use_lif_kernel=True``).
+        """
+        sim = self.make_simulator(connectome, **sim_kwargs)
+        model = self.model
+        if self.trials == 1:
+            if warmup:
+                sim.warmup(self.duration_ms)
+            res = sim.run(self.duration_ms)
+            batch = BatchResult(trials=[res], wall_s=res.wall_s,
+                                vmapped=False,
+                                seeds=[int(model.seed)])
+        else:
+            if warmup:
+                sim.warmup_batch(self.duration_ms, self.trials)
+            batch = sim.run_batch(self.duration_ms, self.trials)
+        report = batch.validate() if self.validate else None
+        return ExperimentResult(experiment=self, batch=batch, report=report)
+
+
+@dataclasses.dataclass
+class ExperimentResult:
+    """Per-trial results + the across-trial validation verdict."""
+    experiment: Experiment
+    batch: BatchResult
+    report: Optional[object] = None     # ValidationReport when validated
+
+    @property
+    def trials(self) -> List[RunResult]:
+        return self.batch.trials
+
+    @property
+    def connectome(self):
+        return self.batch.trials[0]._connectome
+
+    @property
+    def passed(self) -> bool:
+        """True when validation passed (or was not requested)."""
+        return self.report is None or self.report.passed
+
+    def summary(self) -> dict:
+        out = {
+            "name": self.experiment.name,
+            "n_trials": len(self.batch),
+            "t_model_ms": sum(r.t_model_ms for r in self.batch),
+            "wall_s": self.batch.wall_s,
+            "rtf_mean": self.batch.rtf_mean,
+            "rtf_std": self.batch.rtf_std,
+            "vmapped": self.batch.vmapped,
+            "overflow": sum(r.overflow for r in self.batch),
+        }
+        if self.report is not None:
+            out["validation_passed"] = self.report.passed
+        return out
+
+
+def main(argv=None) -> int:
+    """Scenario runner CLI: load a JSON spec, run it, gate on validation."""
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="Run a repro.experiment/v1 scenario JSON")
+    ap.add_argument("scenario", help="path to the scenario JSON")
+    ap.add_argument("--duration-ms", type=float, default=None,
+                    help="override the scenario duration")
+    ap.add_argument("--trials", type=int, default=None,
+                    help="override the scenario trial count")
+    ap.add_argument("--report-json", default=None, metavar="PATH",
+                    help="write the ValidationReport JSON here")
+    args = ap.parse_args(argv)
+
+    exp = Experiment.from_json(args.scenario)
+    overrides = {}
+    if args.duration_ms is not None:
+        overrides["duration_ms"] = args.duration_ms
+    if args.trials is not None:
+        overrides["trials"] = args.trials
+    if overrides:
+        exp = dataclasses.replace(exp, **overrides)
+
+    result = exp.run()
+    for k, v in result.summary().items():
+        print(f"{k}: {v}")
+    if result.report is not None:
+        print(result.report.table())
+        if args.report_json:
+            result.report.to_json(args.report_json)
+            print("report written:", args.report_json)
+        if not result.report.passed:
+            return 4
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

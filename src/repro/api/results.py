@@ -72,6 +72,71 @@ class RunResult:
         return V.validate(self, spec=spec)
 
 
+@dataclasses.dataclass
+class BatchResult:
+    """Outcome of ``Simulator.run_batch``: ``n_trials`` independent runs.
+
+    ``trials`` are full per-trial :class:`RunResult`\\ s.  ``wall_s`` is
+    the joint wall clock of the batch program; when ``vmapped`` all
+    trials executed concurrently in one device program, so each trial's
+    ``wall_s`` is the throughput share ``wall_s / n_trials`` (per-trial
+    RTF is a throughput measure there, not a latency one — the sequential
+    fallback reports true per-trial latencies instead).
+    """
+    trials: List[RunResult]
+    wall_s: float
+    vmapped: bool
+    seeds: List[int] = dataclasses.field(default_factory=list)
+
+    def __len__(self) -> int:
+        return len(self.trials)
+
+    def __iter__(self):
+        return iter(self.trials)
+
+    def __getitem__(self, i: int) -> RunResult:
+        return self.trials[i]
+
+    @property
+    def rtf_trials(self) -> np.ndarray:
+        return np.array([r.rtf for r in self.trials])
+
+    @property
+    def rtf_mean(self) -> float:
+        return float(self.rtf_trials.mean())
+
+    @property
+    def rtf_std(self) -> float:
+        return float(self.rtf_trials.std())
+
+    def pooled(self) -> RunResult:
+        """One :class:`RunResult` pooling every trial: per-step probe data
+        concatenates along the step axis, spike-stats stream carries pool
+        their across-trial moments (``repro.validate.stats.pool_carries``
+        — trials are independent recordings, so ISIs and count bins never
+        span a trial boundary), and ``validate()`` on the result judges
+        the across-trial statistics."""
+        res = concat(self.trials)
+        res.wall_s = self.wall_s
+        res.overflow = sum(r.overflow for r in self.trials)
+        streams = {}
+        for name, snap in self.trials[0].streams.items():
+            snaps = [r.streams[name] for r in self.trials]
+            try:
+                from repro.validate.stats import pool_carries
+                carry = pool_carries([s["carry"] for s in snaps])
+            except (TypeError, AttributeError):
+                # not a spike-stats moment carry: keep the last snapshot
+                carry = snaps[-1]["carry"]
+            streams[name] = {"carry": carry, "meta": dict(snap["meta"])}
+        res.streams = streams
+        return res
+
+    def validate(self, spec=None):
+        """Across-trial validation report (see :meth:`pooled`)."""
+        return self.pooled().validate(spec=spec)
+
+
 def concat(results: List[RunResult]) -> RunResult:
     """Concatenate chunk results along the step axis (``run_chunked``)."""
     if not results:

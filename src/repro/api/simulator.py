@@ -31,10 +31,13 @@ from typing import Callable, Optional, Sequence
 import jax
 import numpy as np
 
+import jax.numpy as jnp
+
 from repro.api import probes as probes_mod
 from repro.api import results as results_mod
 from repro.api.backends import Backend, make_backend
-from repro.api.results import RunResult
+from repro.api.results import BatchResult, RunResult
+from repro.core import stimulus as stimulus_mod
 from repro.core.connectivity import Connectome, build_connectome
 from repro.core.engine import SimConfig
 from repro.core.neuron import NeuronParams
@@ -60,17 +63,24 @@ class Simulator:
         :class:`Backend` instance.
     probes:
         Default recording set: probe names or :class:`Probe` objects.
+    stimulus:
+        Declarative drive timeline: registry kind names, dicts, or
+        ``repro.core.stimulus.Stimulus`` instances (mixed freely).  The
+        default (``None``) is the paper's 8 Hz ``poisson_background``;
+        an explicit timeline *replaces* it, so include the background
+        entry when stimulation should ride on top of it.
     stdp:
         ``True`` or an ``STDPConfig`` — composes pair-STDP into the fused
         engine loop.
     sim_config:
         Explicit :class:`SimConfig`; otherwise derived from ``config`` and
-        ``**overrides`` (e.g. ``use_lif_kernel=True``, ``bg_rate=0.0``).
+        ``**overrides`` (e.g. ``use_lif_kernel=True``).
     """
 
     def __init__(self, config=None, *, connectome: Optional[Connectome] = None,
                  backend="fused", probes: Sequence = ("pop_counts",),
-                 stdp=None, neuron: Optional[NeuronParams] = None,
+                 stimulus=None, stdp=None,
+                 neuron: Optional[NeuronParams] = None,
                  sim_config: Optional[SimConfig] = None, key=None,
                  n_devices: Optional[int] = None, **overrides):
         if config is None and connectome is None:
@@ -90,9 +100,14 @@ class Simulator:
                 strategy=getattr(config, "strategy", "event"),
                 spike_budget=getattr(config, "spike_budget", None),
                 strict_delivery=getattr(config, "strict_delivery", False),
+                stimulus=getattr(config, "stimulus", None),
             )
         if overrides:
             sim_config = dataclasses.replace(sim_config, **overrides)
+        if stimulus is not None:
+            sim_config = dataclasses.replace(
+                sim_config,
+                stimulus=stimulus_mod.resolve_timeline(stimulus))
         self.sim_config = sim_config
         self.t_presim = float(getattr(config, "t_presim", 0.0))
 
@@ -222,6 +237,106 @@ class Simulator:
                 raise DeliveryOverflowError(msg)
             warnings.warn(msg, stacklevel=3)
         return overflow
+
+    # -- multi-trial batch runs ---------------------------------------------
+
+    def _trial_seeds(self, n_trials: Optional[int], seeds) -> list:
+        if seeds is None:
+            if n_trials is None:
+                raise ValueError("pass n_trials or explicit seeds")
+            base = int(getattr(self.config, "seed", 0))
+            return [base + i for i in range(int(n_trials))]
+        seeds = [int(s) for s in seeds]
+        if n_trials is not None and len(seeds) != int(n_trials):
+            raise ValueError(f"{len(seeds)} seeds for n_trials={n_trials}")
+        return seeds
+
+    def warmup_batch(self, t_ms: float, n_trials: int,
+                     probes: Optional[Sequence] = None,
+                     include_presim: bool = True) -> None:
+        """Compile a batch run of this shape so a following ``run_batch``
+        measures execution only.  Pure: no trial is executed (the fused
+        backend AOT-lowers the vmapped program; sequential backends warm
+        their per-trial compile caches)."""
+        pr = self.probes if probes is None else probes_mod.resolve(probes)
+        keys = jnp.stack([jax.random.PRNGKey(s)
+                          for s in self._trial_seeds(n_trials, None)])
+        states = jax.vmap(self.backend.init)(keys)
+        if include_presim and self.t_presim > 0:
+            self.backend.warmup_batch(states, self._steps(self.t_presim),
+                                      ())
+        self.backend.warmup_batch(states, self._steps(t_ms), pr)
+
+    def run_batch(self, t_ms: float, n_trials: Optional[int] = None, *,
+                  seeds: Optional[Sequence[int]] = None,
+                  presim_ms: Optional[float] = None,
+                  probes: Optional[Sequence] = None) -> BatchResult:
+        """Simulate ``n_trials`` independent trials of ``t_ms`` each.
+
+        Trial ``i`` starts from the seeded key ``PRNGKey(seeds[i])``
+        (default seeds: ``config.seed + i``) and is bit-identical to a
+        fresh session run with that key (``sim.reset(PRNGKey(s));
+        sim.run(t_ms)``).  On the fused backend all trials execute as
+        one vmapped device program over shared network tables; backends
+        with per-step dispatch or a busy device mesh (instrumented,
+        sharded) fall back to sequential per-trial runs behind the same
+        surface.  The presim transient runs per trial, untimed.
+
+        Stream-probe carries thread per trial (each trial's
+        ``RunResult.streams`` snapshot covers that trial);
+        ``BatchResult.validate()`` pools the moment carries across
+        trials.  Spike-budget overflow across the batch is surfaced like
+        a single run's (warning, or ``DeliveryOverflowError`` under
+        ``strict_delivery``).  The session's own state is untouched.
+        """
+        seeds = self._trial_seeds(n_trials, seeds)
+        pr = self.probes if probes is None else probes_mod.resolve(probes)
+        step_probes, stream_probes = probes_mod.split_probes(pr)
+        keys = jnp.stack([jax.random.PRNGKey(s) for s in seeds])
+        states = jax.vmap(self.backend.init)(keys)
+        t_pre = self.t_presim if presim_ms is None else float(presim_ms)
+        if t_pre > 0:
+            states, _, _ = self.backend.run_batch(states,
+                                                  self._steps(t_pre), ())
+            jax.block_until_ready(states)
+        n_steps = self._steps(t_ms)
+        t0 = time.perf_counter()
+        states, data, trial_walls = self.backend.run_batch(states, n_steps,
+                                                           pr)
+        jax.block_until_ready((states, data))
+        wall = time.perf_counter() - t0
+
+        vmapped = trial_walls is None
+        trials = []
+        for i in range(len(seeds)):
+            st_i = jax.tree.map(lambda x: x[i], states)
+            data_i = {p.name: np.asarray(data[p.name][i])
+                      for p in step_probes}
+            streams_i = {}
+            for p in stream_probes:
+                carry = jax.tree.map(lambda x: np.asarray(x[i]),
+                                     data[p.name])
+                streams_i[p.name] = {"carry": carry, "meta": dict(p.meta)}
+            trials.append(RunResult(
+                data=data_i, t_model_ms=n_steps * self.sim_config.dt,
+                n_steps=n_steps, dt=self.sim_config.dt,
+                wall_s=(wall / len(seeds) if vmapped else trial_walls[i]),
+                overflow=self.backend.overflow(st_i),
+                streams=streams_i, _connectome=self.connectome))
+        overflow = sum(r.overflow for r in trials)
+        if overflow > 0:
+            msg = (f"spike delivery dropped {overflow} spike(s) across "
+                   f"{len(trials)} trial(s): the per-step spike_budget="
+                   f"{self.sim_config.spike_budget} of strategy "
+                   f"{self.sim_config.strategy!r} was exceeded — raise "
+                   f"spike_budget (or leave it None for the rate-derived "
+                   f"auto value)")
+            if self.sim_config.strict_delivery:
+                from repro.core.delivery import DeliveryOverflowError
+                raise DeliveryOverflowError(msg)
+            warnings.warn(msg, stacklevel=2)
+        return BatchResult(trials=trials, wall_s=wall, vmapped=vmapped,
+                           seeds=list(seeds))
 
     def run_chunked(self, t_ms: float, chunk_ms: float, *,
                     presim_ms: Optional[float] = None,

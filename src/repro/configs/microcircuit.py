@@ -22,6 +22,11 @@ class MicrocircuitConfig:
     spike_budget: Optional[int] = None   # None -> rate-derived auto
     strict_delivery: bool = False        # raise on dropped spikes
     seed: int = 55
+    stimulus: Optional[tuple] = None     # stimulus timeline (registry kinds /
+                                         # Stimulus instances); None -> the
+                                         # paper's 8 Hz poisson_background.
+                                         # Scenario files carry the timeline
+                                         # on Experiment.stimulus instead.
 
 
 CONFIG = MicrocircuitConfig()

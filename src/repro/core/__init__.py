@@ -5,7 +5,12 @@ from repro.core.delivery import (DeliveryOverflowError, DeliveryStrategy,
 from repro.core.engine import (Network, PhaseRunner, SimConfig, SimState,
                                resolve_sim_config, simulate)
 from repro.core.neuron import NeuronParams, NeuronState, Propagators, lif_step
-from repro.core import params, recording
+from repro.core.stimulus import (DCInput, Drive, PoissonBackground,
+                                 StepCurrent, Stimulus, ThalamicPulses,
+                                 available_stimuli, compile_drive,
+                                 resolve_timeline)
+from repro.core.stimulus import register as register_stimulus
+from repro.core import params, recording, stimulus
 
 __all__ = [
     "Connectome", "build_connectome", "Network", "PhaseRunner", "SimConfig",
@@ -13,4 +18,7 @@ __all__ = [
     "NeuronState", "Propagators", "lif_step", "params", "recording",
     "DeliveryOverflowError", "DeliveryStrategy", "available_strategies",
     "get_strategy",
+    "stimulus", "Stimulus", "Drive", "PoissonBackground", "DCInput",
+    "StepCurrent", "ThalamicPulses", "available_stimuli", "compile_drive",
+    "resolve_timeline", "register_stimulus",
 ]

@@ -52,6 +52,8 @@ class Connectome:
     v0_mean: np.ndarray             # [N]
     v0_sd: np.ndarray               # [N]
     pop_of: np.ndarray              # [N] int32 population index
+    k_scaling: float = 1.0          # in-degree scaling this net was built at
+                                    # (stimuli scale their in-degrees by it)
 
 
 def _truncated_normal(rng: np.random.Generator, mean, sd, low, high, size):
@@ -209,6 +211,7 @@ def build_connectome(
         v0_mean=P.V0_MEAN[pop_of].astype(np.float32),
         v0_sd=P.V0_SD[pop_of].astype(np.float32),
         pop_of=pop_of,
+        k_scaling=float(k_scaling),
     )
 
 

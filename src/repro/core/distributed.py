@@ -138,11 +138,24 @@ def abstract_state(n_pad: int, n_dev: int, d_ring: int) -> ShardedSimState:
 
 
 def make_sharded_step(mesh, meta: dict, prop: Propagators, *,
-                      n_exc: int, w_ext: float, bg_rate: float, dt: float,
+                      n_exc: int, w_ext: float, dt: float,
                       spike_budget: int, n_steps: int,
+                      bg_rate: Optional[float] = None, drive=None,
                       pop_of=None, n_pops: int = 8, stream_probes=()):
-    """Returns a shard_map'd ``sim_chunk(state, tables, carries) ->
-    (state, counts, carries)``.
+    """Returns a shard_map'd ``sim_chunk(...) -> (state, counts, carries)``.
+
+    The external drive comes from exactly one of two sources:
+
+    * ``drive`` — a *separable* compiled stimulus timeline
+      (``repro.core.stimulus.Drive``): the per-neuron basis arrays arrive
+      as an extra sharded input, so ``sim_chunk(state, tables, carries,
+      (spike_bases [Ks, N_pad], cur_bases [Kc, N_pad]))`` — each device
+      draws/applies its local slice while the scalar time gates are
+      replicated.  This is the path the api backends use.
+    * ``bg_rate`` — the legacy hardcoded Poisson background read off
+      ``tables.k_ext`` (no extra input: ``sim_chunk(state, tables,
+      carries)``).  Kept for the dry-run (whose tables are abstract) and
+      as the pre-registry bitwise reference.
 
     ``counts``: [n_steps, n_dev] spikes per device per step (cheap record).
     With ``pop_of`` (a [n_pad] global population index, sentinel ``n_pops``
@@ -159,9 +172,17 @@ def make_sharded_step(mesh, meta: dict, prop: Propagators, *,
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
+    if (bg_rate is None) == (drive is None):
+        raise ValueError("pass exactly one of bg_rate= (legacy inline "
+                         "Poisson) or drive= (compiled stimulus timeline)")
     axes = tuple(mesh.axis_names)
     n_loc = meta["n_loc"]
-    lam_scale = bg_rate * dt * 1e-3
+    if drive is not None:
+        spike_plan, cur_plan = drive.plan()   # raises if not separable
+        spike_gates = tuple(g for _, g in spike_plan)
+        cur_gates = tuple(g for _, g in cur_plan)
+    else:
+        lam_scale = bg_rate * dt * 1e-3
 
     state_spec = ShardedSimState(
         V=P(axes), I_ex=P(axes), I_in=P(axes), refrac=P(axes),
@@ -173,20 +194,41 @@ def make_sharded_step(mesh, meta: dict, prop: Propagators, *,
     carries_spec = jax.tree.map(
         lambda _: P(), tuple(p.init() for p in stream_probes))
 
-    def step(carry, _, tab: ShardedTables):
+    def step(carry, _, tab: ShardedTables, bases=None):
         st, scs = carry
         D_ring = st.ring.shape[0]
         slot = st.t % D_ring
         arrivals = jax.lax.dynamic_index_in_dim(st.ring, slot, 0, False)
         in_ex, in_in = arrivals[0, :n_loc], arrivals[1, :n_loc]
 
-        # -- update (local) --
-        key, sub = jax.random.split(st.key[0])
-        ext = jax.random.poisson(sub, tab.k_ext * lam_scale, dtype=jnp.int32)
-        in_ex = in_ex + w_ext * ext.astype(in_ex.dtype)
+        # -- update (local): external drive, then exact integration --
+        i_dc = tab.i_dc
+        if drive is None:
+            key, sub = jax.random.split(st.key[0])
+            ext = jax.random.poisson(sub, tab.k_ext * lam_scale,
+                                     dtype=jnp.int32)
+            in_ex = in_ex + w_ext * ext.astype(in_ex.dtype)
+        else:
+            spike_bases, cur_bases = bases
+            keys = jax.random.split(st.key[0], len(spike_gates) + 1)
+            key = keys[0]
+            ext = None
+            for j, gate in enumerate(spike_gates):
+                lam = spike_bases[j]
+                if gate is not None:
+                    lam = lam * gate(st.t)
+                cnt = jax.random.poisson(keys[1 + j], lam, dtype=jnp.int32)
+                ext = cnt if ext is None else ext + cnt
+            if ext is not None:
+                in_ex = in_ex + w_ext * ext.astype(in_ex.dtype)
+            for j, gate in enumerate(cur_gates):
+                amp = cur_bases[j]
+                if gate is not None:
+                    amp = amp * gate(st.t)
+                i_dc = i_dc + amp
         V = (prop.E_L + (st.V - prop.E_L) * prop.P22
              + st.I_ex * prop.P21_ex + st.I_in * prop.P21_in
-             + tab.i_dc * prop.P20)
+             + i_dc * prop.P20)
         I_ex = st.I_ex * prop.P11_ex + in_ex
         I_in = st.I_in * prop.P11_in + in_in
         refr = st.refrac > 0
@@ -231,6 +273,22 @@ def make_sharded_step(mesh, meta: dict, prop: Propagators, *,
         return (new, scs), counts
 
     counts_spec = P(None, None) if pop_of is not None else P(None, axes)
+
+    if drive is not None:
+        bases_spec = (P(None, axes), P(None, axes))
+
+        @functools.partial(
+            shard_map, mesh=mesh,
+            in_specs=(state_spec, tab_spec, carries_spec, bases_spec),
+            out_specs=(state_spec, counts_spec, carries_spec),
+            check_rep=False)
+        def sim_chunk(state, tables, carries, bases):
+            (state, carries), counts = jax.lax.scan(
+                functools.partial(step, tab=tables, bases=bases),
+                (state, carries), None, length=n_steps)
+            return state, counts, carries
+
+        return sim_chunk
 
     @functools.partial(
         shard_map, mesh=mesh,

@@ -35,9 +35,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import delivery as dlv
+from repro.core import stimulus as stim
 from repro.core.connectivity import Connectome
 from repro.core.neuron import NeuronParams, NeuronState, Propagators, lif_step
 from repro.core.params import InputParams
+
+_DEFAULT_BG_RATE = 8.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,19 +58,36 @@ class SimConfig:
     use_deliver_kernel: bool = False   # Pallas delivery kernels (gated dense
                                        # matvec / sparse-ELL); interpret-mode
                                        # off TPU
-    bg_rate: float = 8.0               # Hz per external synapse
+    bg_rate: float = _DEFAULT_BG_RATE  # deprecated: set stimulus= instead
     state_dtype: type = jnp.float32    # V / currents / ring precision
+    stimulus: Optional[tuple] = None   # tuple of repro.core.stimulus.Stimulus
+                                       # (None -> the bg_rate Poisson drive;
+                                       # resolve_sim_config fills it)
 
 
 def resolve_sim_config(cfg: SimConfig, c: Connectome) -> SimConfig:
-    """Fill connectome-dependent defaults: validates the strategy name and
-    derives ``spike_budget`` from the expected firing rates when unset.
+    """Fill connectome-dependent defaults: validates the strategy name,
+    derives ``spike_budget`` from the expected firing rates when unset, and
+    normalises the stimulus timeline (an unset ``stimulus`` becomes the
+    ``poisson_background`` registry entry carrying the legacy ``bg_rate``).
     The api backends call this in ``build``; direct ``deliver_phase`` users
     must resolve before tracing."""
     dlv.get_strategy(cfg.strategy)
     if cfg.spike_budget is None:
         cfg = dataclasses.replace(
             cfg, spike_budget=dlv.auto_spike_budget(c, cfg.dt))
+    if cfg.stimulus is None:
+        if cfg.bg_rate != _DEFAULT_BG_RATE:
+            warnings.warn(
+                "SimConfig.bg_rate is deprecated; declare the drive with "
+                "stimulus registry entries instead, e.g. stimulus="
+                f"(repro.core.stimulus.PoissonBackground(rate_hz="
+                f"{cfg.bg_rate}),)", DeprecationWarning, stacklevel=3)
+        cfg = dataclasses.replace(
+            cfg, stimulus=(stim.PoissonBackground(rate_hz=cfg.bg_rate),))
+    else:
+        cfg = dataclasses.replace(
+            cfg, stimulus=stim.resolve_timeline(cfg.stimulus))
     return cfg
 
 
@@ -167,8 +187,17 @@ def init_state(c: Connectome, key, state_dtype=jnp.float32,
 # ---------------------------------------------------------------------------
 
 def update_phase(state: SimState, net: Network, prop: Propagators,
-                 cfg: SimConfig, w_ext: float, n: int):
-    """Read ring slot, add Poisson drive, integrate neurons, detect spikes."""
+                 cfg: SimConfig, w_ext: float, n: int,
+                 drive: Optional[stim.Drive] = None):
+    """Read ring slot, add the external drive, integrate, detect spikes.
+
+    ``drive`` is a compiled stimulus timeline (``repro.core.stimulus.
+    compile_drive``); the engine splits the step key into ``drive.n_keys
+    + 1`` subkeys and applies the drive's spike counts through ``w_ext``
+    and its currents through the DC term.  ``drive=None`` keeps the
+    pre-registry hardcoded Poisson path (reads ``cfg.bg_rate``) — the
+    bitwise reference the equivalence tests pin the default timeline to.
+    """
     D = state.ring.shape[0]
     slot = state.t % D
     arrivals = jax.lax.dynamic_index_in_dim(
@@ -176,17 +205,27 @@ def update_phase(state: SimState, net: Network, prop: Propagators,
     in_ex = arrivals[0, :n]
     in_in = arrivals[1, :n]
 
-    key, sub = jax.random.split(state.key)
-    lam = net.k_ext * (cfg.bg_rate * cfg.dt * 1e-3)
-    ext = jax.random.poisson(sub, lam, dtype=jnp.int32)
-    in_ex = in_ex + w_ext * ext.astype(in_ex.dtype)
+    i_dc = net.i_dc
+    if drive is None:
+        key, sub = jax.random.split(state.key)
+        lam = net.k_ext * (cfg.bg_rate * cfg.dt * 1e-3)
+        ext = jax.random.poisson(sub, lam, dtype=jnp.int32)
+        in_ex = in_ex + w_ext * ext.astype(in_ex.dtype)
+    else:
+        keys = jax.random.split(state.key, drive.n_keys + 1)
+        key = keys[0]
+        I_ext, ext_in = drive(tuple(keys[1:]), state.t, state)
+        if ext_in is not None:
+            in_ex = in_ex + w_ext * ext_in.astype(in_ex.dtype)
+        if I_ext is not None:
+            i_dc = i_dc + I_ext
 
     if cfg.use_lif_kernel:
         from repro.kernels import ops as kops
         neuron, spiked = kops.lif_update(
-            state.neuron, prop, in_ex, in_in, net.i_dc)
+            state.neuron, prop, in_ex, in_in, i_dc)
     else:
-        neuron, spiked = lif_step(state.neuron, prop, in_ex, in_in, net.i_dc)
+        neuron, spiked = lif_step(state.neuron, prop, in_ex, in_in, i_dc)
 
     # consume the slot
     ring = jax.lax.dynamic_update_index_in_dim(
@@ -215,16 +254,18 @@ def deliver_phase(state: SimState, net: Network, cfg: SimConfig,
 
 def make_step(net: Network, prop: Propagators, cfg: SimConfig,
               w_ext: float, n: int, n_exc: int, n_pops: int = 8,
-              record_fn: Optional[Callable] = None):
+              record_fn: Optional[Callable] = None,
+              drive: Optional[stim.Drive] = None):
     """Build the fused update+deliver step.
 
     ``record_fn(state, spiked) -> pytree`` overrides the legacy
     ``cfg.record`` enum (the probe system in ``repro.api`` uses this hook).
     ``n_pops`` is the static population count for pop_counts recording —
     derive it from the ``Connectome`` (``len(c.pop_sizes)``), not a literal.
+    ``drive`` threads a compiled stimulus timeline into ``update_phase``.
     """
     def step(state: SimState, _):
-        state, spiked = update_phase(state, net, prop, cfg, w_ext, n)
+        state, spiked = update_phase(state, net, prop, cfg, w_ext, n, drive)
         state = deliver_phase(state, net, cfg, spiked, n_exc)
         if record_fn is not None:
             out = record_fn(state, spiked)
@@ -241,10 +282,12 @@ def make_step(net: Network, prop: Propagators, cfg: SimConfig,
 
 
 @functools.partial(jax.jit, static_argnames=("n_steps", "cfg", "prop",
-                                             "w_ext", "n", "n_exc", "n_pops"))
+                                             "w_ext", "n", "n_exc", "n_pops",
+                                             "drive"))
 def _run(state, net, n_steps: int, cfg: SimConfig, prop: Propagators,
-         w_ext: float, n: int, n_exc: int, n_pops: int = 8):
-    step = make_step(net, prop, cfg, w_ext, n, n_exc, n_pops)
+         w_ext: float, n: int, n_exc: int, n_pops: int = 8,
+         drive: Optional[stim.Drive] = None):
+    step = make_step(net, prop, cfg, w_ext, n, n_exc, n_pops, drive=drive)
     return jax.lax.scan(step, state, None, length=n_steps)
 
 
@@ -264,7 +307,13 @@ def simulate(c: Connectome, t_sim_ms: float, cfg: SimConfig,
         "repro.core.engine.simulate is deprecated; use repro.api.Simulator",
         DeprecationWarning, stacklevel=2)
     neuron = neuron or NeuronParams()
+    explicit_stimulus = cfg.stimulus is not None
     cfg = resolve_sim_config(cfg, c)
+    # an explicitly declared timeline compiles; the default stays on the
+    # legacy inline path (drive=None) so this shim remains the bitwise
+    # pre-registry reference the equivalence tests compare against
+    drive = (stim.compile_drive(cfg.stimulus, c, cfg, neuron)
+             if explicit_stimulus else None)
     prop = Propagators.make(neuron, cfg.dt)
     if net is None:
         net = prepare_network(c, cfg)
@@ -273,7 +322,7 @@ def simulate(c: Connectome, t_sim_ms: float, cfg: SimConfig,
     n_steps = int(round(t_sim_ms / cfg.dt))
     final, recorded = _run(state, net, n_steps, cfg, prop,
                            c.w_ext, c.n_total, c.n_exc,
-                           n_pops=len(c.pop_sizes))
+                           n_pops=len(c.pop_sizes), drive=drive)
     return final, recorded, net
 
 

@@ -9,7 +9,8 @@ pF, rates in Hz.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+import warnings
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -61,6 +62,34 @@ _K_EXT_CANONICAL = {
     "L5E": 2000, "L5I": 1900, "L6E": 2900, "L6I": 2100,
 }
 K_EXT = np.array([_K_EXT_CANONICAL[p] for p in POPULATIONS], dtype=np.int64)
+
+# Thalamic input (PD 2014 stimulation protocol): n_thal relay neurons
+# project onto L4 and L6 with these connection probabilities (canonical
+# order).  The ``thalamic_pulses`` stimulus (repro.core.stimulus) drives
+# the resulting in-degrees with pulsed Poisson trains at the external
+# synaptic weight.
+N_THAL = 902
+_THAL_CONN_PROBS_CANONICAL = {
+    "L23E": 0.0, "L23I": 0.0, "L4E": 0.0983, "L4I": 0.0619,
+    "L5E": 0.0, "L5I": 0.0, "L6E": 0.0512, "L6I": 0.0196,
+}
+THAL_CONN_PROBS = np.array(
+    [_THAL_CONN_PROBS_CANONICAL[p] for p in POPULATIONS], dtype=np.float64)
+
+
+def thalamic_indegrees(k_scaling: float = 1.0) -> np.ndarray:
+    """Per-population thalamic in-degree at ``k_scaling`` (fixed_total_number
+    rule, multapses allowed — same formula as :func:`synapse_numbers`)."""
+    n_full = np.array([N_FULL[p] for p in POPULATIONS], dtype=np.float64)
+    prod = n_full * float(N_THAL)
+    with np.errstate(divide="ignore"):
+        k_full = np.where(
+            THAL_CONN_PROBS > 0,
+            np.log1p(-THAL_CONN_PROBS) / np.log1p(-1.0 / prod),
+            0.0,
+        )
+    return k_full / n_full * float(k_scaling)
+
 
 # Stationary firing rates of the full-scale model (Hz), used for the
 # down-scaling DC compensation (van Albada et al. 2015) and as the validation
@@ -115,8 +144,36 @@ class SynapseParams:
 
 @dataclasses.dataclass(frozen=True)
 class InputParams:
-    bg_rate: float = 8.0       # Hz per external synapse
-    use_dc: bool = False       # Poisson drive (paper setting), not DC
+    """Legacy external-drive spec.
+
+    .. deprecated::
+        The drive is declarative now: pass stimulus registry entries
+        (``repro.core.stimulus``: ``poisson_background`` is the paper
+        setting, ``dc`` the equivalent-mean-current option) to
+        ``SimConfig.stimulus`` / ``Experiment.stimulus``.  The old
+        ``use_dc`` flag — whose name inverted its documented meaning —
+        only survives as a warning shim; :meth:`stimulus` maps either
+        setting onto its registry entry.
+    """
+    bg_rate: float = 8.0            # Hz per external synapse
+    use_dc: Optional[bool] = None   # deprecated; see class docstring
+
+    def __post_init__(self):
+        if self.use_dc is not None:
+            warnings.warn(
+                "InputParams.use_dc is deprecated (the flag's comment "
+                "contradicted its name): declare the drive with stimulus "
+                "registry entries instead — repro.core.stimulus."
+                "PoissonBackground (paper setting) or DCInput "
+                "(equivalent-mean DC); InputParams.stimulus() builds the "
+                "matching timeline", DeprecationWarning, stacklevel=3)
+
+    def stimulus(self) -> tuple:
+        """The stimulus-registry timeline equivalent to this legacy spec."""
+        from repro.core import stimulus as S
+        if self.use_dc:
+            return (S.DCInput(rate_hz=self.bg_rate),)
+        return (S.PoissonBackground(rate_hz=self.bg_rate),)
 
 
 @dataclasses.dataclass(frozen=True)

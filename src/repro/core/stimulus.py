@@ -1,0 +1,428 @@
+"""Stimulus protocols: the declarative external-drive subsystem.
+
+The microcircuit's scientific use is defined by *experiments* — background
+Poisson drive swapped for an equivalent DC current, thalamic pulse
+stimulation of L4/L6, step currents into chosen populations (Potjans &
+Diesmann 2014 protocols; the community benchmarks of the NEST/GPU
+reproductions run the same set).  This module turns those protocols into
+data: a stimulus is a small frozen dataclass registered under a ``kind``
+string, serializable to/from JSON (``repro.api.experiment`` embeds them in
+scenario files), and *compiled* once per session into a pure per-step
+drive function the engine evaluates inside its scan.
+
+Built-in registry entries::
+
+    poisson_background(rate_hz=8.0)   the paper's default drive: independent
+                                      Poisson sources at ``rate_hz`` per
+                                      external synapse (``Connectome.k_ext``)
+    dc(amplitude_pa=None)             DC current; ``None`` derives the
+                                      equivalent mean current of the Poisson
+                                      background it replaces (NEST's
+                                      ``poisson_input=False`` option)
+    thalamic_pulses(...)              pulsed thalamic population (n=902)
+                                      targeting L4/L6 with the PD-2014
+                                      in-degrees
+    step_current(amplitude_pa=...)    constant current into selected
+                                      populations over a time window
+
+Custom protocols subclass :class:`Stimulus` under ``@register("name")``.
+
+Compilation contract (what the engines consume)
+-----------------------------------------------
+``compile_drive(stimuli, c, cfg, neuron)`` returns a :class:`Drive`:
+a pure function ``drive(subkeys, t_step, state) -> (I_ext, ext_in)`` where
+
+* ``I_ext`` is a ``[N]`` current (pA) added to the DC term of the LIF
+  update (``None`` when no current-type stimulus is active — the engine
+  then keeps its original op sequence, bitwise),
+* ``ext_in`` is a ``[N]`` external spike count (int32; scaled counts for
+  custom relative weights) that the engine multiplies by the external
+  synaptic weight ``w_ext`` — the exact op order of the pre-registry
+  hardcoded path, so ``poisson_background`` alone is bitwise-equal to it.
+
+``drive.n_keys`` stochastic stimuli each consume one PRNG subkey per step;
+the engine splits its state key into ``n_keys + 1`` (for exactly one
+stochastic stimulus this reduces to the legacy ``jax.random.split(key)``).
+
+Stimulus windows are positioned in *absolute session model time*
+(``state.t * dt``), which includes the presim transient — a scenario with
+``t_presim=100`` and a pulse at ``t_start_ms=400`` fires 300 ms into the
+recorded window.
+
+Built-in stimuli are *separable*: a static per-neuron basis array times a
+scalar time gate.  The sharded engine relies on that structure (the basis
+shards with the neuron axis; the gate is replicated), so custom stimuli
+that override :meth:`Stimulus.compile` with a general ``fn`` run on the
+fused/instrumented backends only.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import params as P
+
+REGISTRY: Dict[str, type] = {}
+
+
+def register(kind: str):
+    """Class decorator: register a :class:`Stimulus` subclass under ``kind``."""
+    def deco(cls):
+        if not (isinstance(cls, type) and issubclass(cls, Stimulus)):
+            raise TypeError(f"@register({kind!r}) needs a Stimulus subclass, "
+                            f"got {cls!r}")
+        if kind in REGISTRY:
+            raise ValueError(f"stimulus kind {kind!r} already registered")
+        cls.kind = kind
+        REGISTRY[kind] = cls
+        return cls
+    return deco
+
+
+def available_stimuli() -> Tuple[str, ...]:
+    return tuple(sorted(REGISTRY))
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class CompiledStimulus:
+    """One stimulus lowered against a connectome.
+
+    Separable form (all built-ins): ``basis`` is a static per-neuron
+    ``[N]`` float32 array — expected spike count per step for the
+    ``"spikes"`` channel, current in pA for ``"current"`` — and ``gate``
+    an optional pure scalar function of the traced step counter (``None``
+    = always on, which keeps the always-on background bitwise-identical
+    to the pre-registry path).  Fully general stimuli set ``fn(key,
+    t_step, state) -> (I_ext | None, ext_in | None)`` instead; they are
+    rejected by the sharded engine.
+    """
+    channel: str                                  # "spikes" | "current"
+    basis: Optional[np.ndarray] = None            # [N] float32
+    gate: Optional[Callable] = None               # t_step -> f32 scalar
+    fn: Optional[Callable] = None                 # general escape hatch
+    stochastic: bool = False                      # consumes a PRNG subkey
+
+    def __post_init__(self):
+        if (self.basis is None) == (self.fn is None):
+            raise ValueError("CompiledStimulus needs exactly one of "
+                             "basis= (separable) or fn= (general)")
+        if self.channel not in ("spikes", "current"):
+            raise ValueError(f"channel must be 'spikes' or 'current', "
+                             f"got {self.channel!r}")
+
+
+@dataclasses.dataclass(eq=False)
+class Drive:
+    """A compiled stimulus timeline: the engine-facing per-step drive.
+
+    Identity-hashed (``eq=False``) so it can ride as a jit-static
+    argument; backends compile it once per ``build``.
+    """
+    compiled: Tuple[CompiledStimulus, ...]
+    n: int                                        # neurons driven
+
+    @property
+    def n_keys(self) -> int:
+        return sum(1 for s in self.compiled if s.stochastic)
+
+    @property
+    def separable(self) -> bool:
+        return all(s.fn is None for s in self.compiled)
+
+    def __call__(self, subkeys, t_step, state):
+        """Evaluate every stimulus at ``t_step``; sums per channel.
+
+        Returns ``(I_ext, ext_in)`` with ``None`` for a channel no
+        stimulus feeds (the engine then skips the add entirely).
+        """
+        I_ext, ext_in, k = None, None, 0
+        for s in self.compiled:
+            key = None
+            if s.stochastic:
+                key, k = subkeys[k], k + 1
+            if s.fn is not None:
+                i_c, e_c = s.fn(key, t_step, state)
+            else:
+                basis = jnp.asarray(s.basis)
+                val = basis if s.gate is None else basis * s.gate(t_step)
+                if s.channel == "spikes":
+                    i_c, e_c = None, jax.random.poisson(key, val,
+                                                        dtype=jnp.int32)
+                else:
+                    i_c, e_c = val, None
+            if i_c is not None:
+                I_ext = i_c if I_ext is None else I_ext + i_c
+            if e_c is not None:
+                ext_in = e_c if ext_in is None else ext_in + e_c
+        return I_ext, ext_in
+
+    def plan(self):
+        """(spike, current) lists of ``(basis [N] f32, gate)`` pairs — the
+        structure the sharded engine shards over devices.  Raises for
+        non-separable timelines."""
+        if not self.separable:
+            bad = [s for s in self.compiled if s.fn is not None]
+            raise NotImplementedError(
+                f"{len(bad)} stimulus(es) compile to a general fn (not a "
+                f"basis x gate form); the sharded engine supports "
+                f"separable stimuli only — run them on the fused or "
+                f"instrumented backend")
+        spk = [(s.basis, s.gate) for s in self.compiled
+               if s.channel == "spikes"]
+        cur = [(s.basis, s.gate) for s in self.compiled
+               if s.channel == "current"]
+        return spk, cur
+
+    def padded_bases(self, n_pad: int):
+        """Stacked basis arrays zero-padded to ``n_pad`` neurons — the
+        sharded engine's extra input ``(spike_bases [Ks, n_pad],
+        cur_bases [Kc, n_pad])`` (padding neurons receive no drive)."""
+        spk, cur = self.plan()
+
+        def stack(rows):
+            out = np.zeros((len(rows), n_pad), np.float32)
+            for i, (basis, _) in enumerate(rows):
+                out[i, :self.n] = basis
+            return out
+        return stack(spk), stack(cur)
+
+
+# ---------------------------------------------------------------------------
+# Spec base + (de)serialization
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Stimulus:
+    """Base class: a declarative, hashable, JSON-serializable stimulus.
+
+    Subclasses are frozen dataclasses (hashability lets a stimulus tuple
+    live on the jit-static ``SimConfig``) registered via :func:`register`;
+    they implement :meth:`compile` against a connectome.
+    """
+
+    kind = "abstract"
+
+    def compile(self, c, cfg, neuron) -> CompiledStimulus:
+        raise NotImplementedError
+
+    def to_dict(self) -> dict:
+        d = {"kind": self.kind}
+        d.update(dataclasses.asdict(self))
+        return d
+
+    @staticmethod
+    def from_dict(d: dict) -> "Stimulus":
+        d = dict(d)
+        kind = d.pop("kind", None)
+        if kind not in REGISTRY:
+            raise ValueError(f"unknown stimulus kind {kind!r}; "
+                             f"registered: {list(available_stimuli())}")
+        cls = REGISTRY[kind]
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown field(s) {sorted(unknown)} for "
+                             f"stimulus {kind!r} (known: {sorted(known)})")
+        return cls(**d)
+
+
+def resolve_timeline(spec) -> Tuple[Stimulus, ...]:
+    """Normalise a stimulus timeline: names, dicts and instances mix freely.
+
+    ``"poisson_background"`` -> the registered class's defaults; a dict is
+    routed through :meth:`Stimulus.from_dict` (unknown kinds/fields
+    raise); instances pass through.  Returns a hashable tuple.
+    """
+    if isinstance(spec, (Stimulus, str, dict)):
+        spec = (spec,)
+    out = []
+    for s in spec:
+        if isinstance(s, str):
+            if s not in REGISTRY:
+                raise ValueError(f"unknown stimulus kind {s!r}; "
+                                 f"registered: {list(available_stimuli())}")
+            s = REGISTRY[s]()
+        elif isinstance(s, dict):
+            s = Stimulus.from_dict(s)
+        elif not isinstance(s, Stimulus):
+            raise TypeError(f"stimulus must be a kind name, dict or "
+                            f"Stimulus, got {type(s)}")
+        out.append(s)
+    return tuple(out)
+
+
+def compile_drive(stimuli, c, cfg, neuron=None) -> Drive:
+    """Lower a stimulus timeline against a connectome into a :class:`Drive`.
+
+    ``cfg`` supplies ``dt``; ``neuron`` (``NeuronParams``) the synaptic
+    time constant the equivalent-DC conversion needs.
+    """
+    neuron = neuron or P.NeuronParams()
+    stimuli = resolve_timeline(stimuli)
+    compiled = tuple(s.compile(c, cfg, neuron) for s in stimuli)
+    return Drive(compiled=compiled, n=int(c.n_total))
+
+
+# ---------------------------------------------------------------------------
+# Shared helpers for the built-ins
+# ---------------------------------------------------------------------------
+
+def _window_gate(t_start_ms: float, t_stop_ms: Optional[float], dt: float):
+    """Scalar 0/1 gate over [t_start, t_stop); ``None`` when always-on.
+
+    Returning ``None`` for the trivial window keeps the default background
+    drive free of extra ops — the bitwise-equality contract with the
+    pre-registry path.
+    """
+    start = int(round(t_start_ms / dt))
+    stop = None if t_stop_ms is None else int(round(t_stop_ms / dt))
+    if start <= 0 and stop is None:
+        return None
+
+    def gate(t_step):
+        on = t_step >= start
+        if stop is not None:
+            on = on & (t_step < stop)
+        return on.astype(jnp.float32)
+    return gate
+
+
+def _population_mask(c, populations) -> np.ndarray:
+    """[N] float32 membership mask; ``None`` selects every population."""
+    if populations is None:
+        return np.ones(c.n_total, np.float32)
+    names = tuple(populations)
+    unknown = set(names) - set(P.POPULATIONS)
+    if unknown:
+        raise ValueError(f"unknown population(s) {sorted(unknown)}; "
+                         f"model has {list(P.POPULATIONS)}")
+    sel = np.array([P.POPULATIONS.index(p) for p in names])
+    return np.isin(np.asarray(c.pop_of), sel).astype(np.float32)
+
+
+def _tupled(value):
+    return value if value is None else tuple(value)
+
+
+# ---------------------------------------------------------------------------
+# Built-in registry entries
+# ---------------------------------------------------------------------------
+
+@register("poisson_background")
+@dataclasses.dataclass(frozen=True)
+class PoissonBackground(Stimulus):
+    """The paper's default drive: ``k_ext`` independent Poisson sources per
+    neuron at ``rate_hz``, delivered with the external weight ``w_ext``.
+
+    With the default always-on window this compiles to the exact op
+    sequence of the pre-registry hardcoded path (same key split, same
+    float32 rate product), so it is bitwise-equal to it on every backend.
+    """
+    rate_hz: float = 8.0
+    t_start_ms: float = 0.0
+    t_stop_ms: Optional[float] = None
+
+    def compile(self, c, cfg, neuron) -> CompiledStimulus:
+        basis = (np.asarray(c.k_ext, np.float32)
+                 * np.float32(self.rate_hz * cfg.dt * 1e-3))
+        return CompiledStimulus(
+            channel="spikes", basis=basis,
+            gate=_window_gate(self.t_start_ms, self.t_stop_ms, cfg.dt),
+            stochastic=True)
+
+
+@register("dc")
+@dataclasses.dataclass(frozen=True)
+class DCInput(Stimulus):
+    """DC current drive (pA per neuron).
+
+    ``amplitude_pa=None`` derives the *equivalent mean current* of the
+    Poisson background it replaces — the reference implementation's
+    DC-input option (NEST microcircuit ``poisson_input=False``):
+    ``I = 1e-3 * tau_syn_ex * rate_hz * k_ext * w_ext``.  An explicit
+    amplitude applies uniformly over the selected ``populations``.
+    """
+    amplitude_pa: Optional[float] = None
+    rate_hz: float = 8.0            # used only when amplitude_pa is None
+    populations: Optional[Tuple[str, ...]] = None
+    t_start_ms: float = 0.0
+    t_stop_ms: Optional[float] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "populations", _tupled(self.populations))
+
+    def compile(self, c, cfg, neuron) -> CompiledStimulus:
+        mask = _population_mask(c, self.populations)
+        if self.amplitude_pa is None:
+            amp = (1e-3 * neuron.tau_syn_ex * self.rate_hz
+                   * np.asarray(c.k_ext, np.float64) * float(c.w_ext))
+        else:
+            amp = float(self.amplitude_pa)
+        basis = (mask * amp).astype(np.float32)
+        return CompiledStimulus(
+            channel="current", basis=basis,
+            gate=_window_gate(self.t_start_ms, self.t_stop_ms, cfg.dt),
+            stochastic=False)
+
+
+@register("step_current")
+@dataclasses.dataclass(frozen=True)
+class StepCurrent(Stimulus):
+    """Constant current step into selected populations over a window."""
+    amplitude_pa: float = 0.0
+    populations: Optional[Tuple[str, ...]] = None
+    t_start_ms: float = 0.0
+    t_stop_ms: Optional[float] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "populations", _tupled(self.populations))
+
+    def compile(self, c, cfg, neuron) -> CompiledStimulus:
+        basis = (_population_mask(c, self.populations)
+                 * np.float32(self.amplitude_pa)).astype(np.float32)
+        return CompiledStimulus(
+            channel="current", basis=basis,
+            gate=_window_gate(self.t_start_ms, self.t_stop_ms, cfg.dt),
+            stochastic=False)
+
+
+@register("thalamic_pulses")
+@dataclasses.dataclass(frozen=True)
+class ThalamicPulses(Stimulus):
+    """PD-2014 thalamic stimulation: ``n_thal=902`` relay neurons firing at
+    ``rate_hz`` during ``duration_ms`` pulses every ``interval_ms``.
+
+    Targets L4E/L4I/L6E/L6I through the published thalamocortical
+    connection probabilities (``params.THAL_CONN_PROBS``); in-degrees
+    scale with the connectome's ``k_scaling`` like every other projection,
+    and deliveries use the external weight ``w_ext`` (thalamic synapses
+    share the background PSP amplitude in the reference model).
+    """
+    rate_hz: float = 120.0
+    start_ms: float = 700.0
+    interval_ms: float = 1000.0
+    duration_ms: float = 10.0
+    n_pulses: Optional[int] = None   # None: pulse until the run ends
+
+    def compile(self, c, cfg, neuron) -> CompiledStimulus:
+        k_th = P.thalamic_indegrees(getattr(c, "k_scaling", 1.0))
+        basis = (k_th[np.asarray(c.pop_of)]
+                 * np.float64(self.rate_hz * cfg.dt * 1e-3)
+                 ).astype(np.float32)
+        start = int(round(self.start_ms / cfg.dt))
+        interval = max(1, int(round(self.interval_ms / cfg.dt)))
+        duration = int(round(self.duration_ms / cfg.dt))
+
+        def gate(t_step):
+            since = t_step - start
+            in_pulse = (since >= 0) & ((since % interval) < duration)
+            if self.n_pulses is not None:
+                in_pulse = in_pulse & (since // interval < self.n_pulses)
+            return in_pulse.astype(jnp.float32)
+
+        return CompiledStimulus(channel="spikes", basis=basis, gate=gate,
+                                stochastic=True)

@@ -203,6 +203,42 @@ class RasterAccumulator:
             bin_outer=bin_outer.astype(np.float32))
 
 
+def pool_carries(carries) -> SpikeStatsCarry:
+    """Pool independent trials' moment carries into one carry.
+
+    Trials are independent recordings of the same sampled neurons, so the
+    pooled statistics sum the closed moments (spike counts, ISI moments,
+    closed count bins) and the step totals; the open per-trial tails
+    (``last_spike``, ``bin_acc``) are reset — an ISI or count bin never
+    spans a trial boundary.  ``finalize`` on the result yields
+    across-trial rate / CV-ISI / correlation estimates (the multi-trial
+    batch runner's validation path).
+    """
+    carries = [SpikeStatsCarry(*jax.tree.map(np.asarray, tuple(c)))
+               for c in carries]
+    if not carries:
+        raise ValueError("no carries to pool")
+    ns = carries[0].n_spikes.shape[0]
+    if any(c.n_spikes.shape[0] != ns for c in carries):
+        raise ValueError("carries sample different neuron counts")
+
+    def tot(field, dtype):
+        return sum(getattr(c, field) for c in carries).astype(dtype)
+
+    return SpikeStatsCarry(
+        steps=np.int32(sum(int(c.steps) for c in carries)),
+        last_spike=np.full((ns,), -1, np.int32),
+        n_spikes=tot("n_spikes", np.int32),
+        isi_count=tot("isi_count", np.int32),
+        isi_sum=tot("isi_sum", np.float32),
+        isi_sumsq=tot("isi_sumsq", np.float32),
+        bin_acc=np.zeros((ns,), np.int32),
+        n_bins=np.int32(sum(int(c.n_bins) for c in carries)),
+        bin_sum=tot("bin_sum", np.float32),
+        bin_outer=tot("bin_outer", np.float32),
+    )
+
+
 # ---------------------------------------------------------------------------
 # Finalization: moments -> statistics
 # ---------------------------------------------------------------------------

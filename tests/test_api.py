@@ -182,6 +182,31 @@ def test_legacy_shims_warn(smoke_c):
         PhaseRunner(smoke_c, cfg)
 
 
+def test_drive_shims_warn(smoke_c):
+    """use_dc (whose comment contradicted its name) and SimConfig.bg_rate
+    are deprecation shims mapping onto stimulus-registry entries."""
+    from repro.core import stimulus as S
+    from repro.core.engine import SimConfig, resolve_sim_config
+    from repro.core.params import InputParams
+
+    with pytest.warns(DeprecationWarning, match="use_dc"):
+        inp = InputParams(use_dc=True)
+    assert inp.stimulus() == (S.DCInput(rate_hz=8.0),)
+    with pytest.warns(DeprecationWarning, match="use_dc"):
+        inp = InputParams(use_dc=False)
+    assert inp.stimulus() == (S.PoissonBackground(rate_hz=8.0),)
+
+    with pytest.warns(DeprecationWarning, match="bg_rate is deprecated"):
+        cfg = resolve_sim_config(SimConfig(bg_rate=3.0), smoke_c)
+    assert cfg.stimulus == (S.PoissonBackground(rate_hz=3.0),)
+    # the default drive resolves silently to the same registry entry
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        cfg = resolve_sim_config(SimConfig(), smoke_c)
+    assert cfg.stimulus == (S.PoissonBackground(rate_hz=8.0),)
+
+
 def test_backend_instance_and_rtf_accounting(smoke_c):
     sim = Simulator(CFG, connectome=smoke_c, backend=FusedBackend())
     res = sim.run(3.0)

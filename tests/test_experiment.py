@@ -1,0 +1,183 @@
+"""Experiment API: schema round-trips, committed scenarios, and the
+multi-trial batch runner."""
+import dataclasses
+import glob
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import Experiment, Simulator
+from repro.api.experiment import SCHEMA
+from repro.configs.microcircuit import SMOKE, MicrocircuitConfig
+
+SCENARIO_DIR = os.path.join(os.path.dirname(__file__), "..", "examples",
+                            "scenarios")
+CFG = dataclasses.replace(SMOKE, t_presim=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Serialization (schema repro.experiment/v1)
+# ---------------------------------------------------------------------------
+
+def test_round_trip_through_json():
+    exp = Experiment(
+        model=MicrocircuitConfig(scale=0.05, seed=7),
+        stimulus=["poisson_background",
+                  {"kind": "thalamic_pulses", "start_ms": 200.0}],
+        probes=("pop_counts", "total_counts"),
+        duration_ms=250.0, trials=3, validate=True, name="rt")
+    d = exp.to_dict()
+    assert d["schema"] == SCHEMA
+    assert Experiment.from_dict(json.loads(json.dumps(d))) == exp
+
+
+def test_unknown_fields_rejected_everywhere():
+    d = Experiment(name="x").to_dict()
+    bad = dict(d, surprise=1)
+    with pytest.raises(ValueError, match="unknown experiment field"):
+        Experiment.from_dict(bad)
+    bad = dict(d, model=dict(d["model"], lasers=9000))
+    with pytest.raises(ValueError, match="unknown model field"):
+        Experiment.from_dict(bad)
+    bad = dict(d, stimulus=[{"kind": "dc", "zap": 1}])
+    with pytest.raises(ValueError, match="unknown field"):
+        Experiment.from_dict(bad)
+    with pytest.raises(ValueError, match="schema"):
+        Experiment.from_dict(dict(d, schema="repro.experiment/v999"))
+    with pytest.raises(ValueError, match="schema"):
+        Experiment.from_dict({k: v for k, v in d.items()
+                              if k != "schema"})
+
+
+def test_callable_probes_do_not_serialize():
+    from repro.api import custom
+    exp = Experiment(probes=(custom("x", lambda ctx: ctx.spiked),))
+    with pytest.raises(ValueError, match="named probes"):
+        exp.to_dict()
+
+
+def test_committed_scenarios_load_verbatim():
+    """Every committed examples/scenarios/*.json parses under the strict
+    schema (unknown fields would raise)."""
+    paths = sorted(glob.glob(os.path.join(SCENARIO_DIR, "*.json")))
+    assert len(paths) >= 3, f"scenario files missing from {SCENARIO_DIR}"
+    for path in paths:
+        exp = Experiment.from_json(path)
+        assert exp.name
+        # and they re-serialize to the exact committed content
+        with open(path) as f:
+            assert json.load(f) == exp.to_dict(), path
+
+
+# ---------------------------------------------------------------------------
+# Execution
+# ---------------------------------------------------------------------------
+
+def test_thalamic_scenario_runs_end_to_end(medium_connectome):
+    """The acceptance scenario: the committed thalamic JSON runs through
+    Experiment.from_dict(...).run(), and its background-only control is
+    bitwise-equal to the pre-refactor drive path."""
+    with open(os.path.join(SCENARIO_DIR, "thalamic_pulses.json")) as f:
+        doc = json.load(f)
+    exp = Experiment.from_dict(doc)
+    # shrink to test scale/horizon (the committed scenario is 0.05/500ms;
+    # medium_connectome is the same 0.05 ladder rung with the test seed)
+    exp = dataclasses.replace(
+        exp, duration_ms=60.0,
+        model=dataclasses.replace(exp.model, t_presim=0.0),
+        stimulus=(exp.stimulus[0],
+                  dataclasses.replace(exp.stimulus[1], start_ms=20.0,
+                                      interval_ms=40.0)))
+    res = exp.run(connectome=medium_connectome)
+    assert res.passed and len(res.trials) == 1
+    pc = res.trials[0]["pop_counts"]
+    assert pc.shape == (600, 8)
+    # stimulated window exceeds the pre-pulse baseline in L4
+    assert pc[200:300, 1].sum() / 100 > 2 * pc[:200, 1].sum() / 200
+
+    # background-only control == the pre-refactor hardcoded drive path
+    control = dataclasses.replace(exp, stimulus=(exp.stimulus[0],))
+    got = control.run(connectome=medium_connectome).trials[0]["pop_counts"]
+    import warnings
+    from repro.core import simulate
+    from repro.core.engine import SimConfig
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        _, rec, _ = simulate(
+            medium_connectome, 60.0,
+            SimConfig(record="pop_counts", spike_budget=None),
+            key=jax.random.PRNGKey(exp.model.seed))
+    np.testing.assert_array_equal(np.asarray(rec), got)
+
+
+def test_run_batch_matches_sequential_seeded_runs(medium_connectome):
+    """The acceptance criterion: run_batch(4) at scale 0.05 matches 4
+    sequential seeded runs' spike statistics (bitwise, in fact)."""
+    cfg = dataclasses.replace(SMOKE, n_scaling=0.05, k_scaling=0.05,
+                              t_presim=0.0, spike_budget=256)
+    sim = Simulator(cfg, connectome=medium_connectome)
+    batch = sim.run_batch(10.0, 4)
+    assert batch.vmapped and len(batch) == 4
+    assert batch.seeds == [cfg.seed + i for i in range(4)]
+    for seed, trial in zip(batch.seeds, batch):
+        ref = Simulator(cfg, connectome=medium_connectome)
+        ref.reset(jax.random.PRNGKey(seed))
+        want = ref.run(10.0)
+        np.testing.assert_array_equal(want["pop_counts"],
+                                      trial["pop_counts"])
+    # distinct seeds -> distinct realisations
+    assert not np.array_equal(batch[0]["pop_counts"],
+                              batch[1]["pop_counts"])
+    assert batch.rtf_mean > 0 and batch.rtf_std >= 0
+
+
+def test_run_batch_sequential_fallback_matches_vmapped(small_connectome):
+    """The instrumented backend's sequential fallback produces the same
+    trials as the fused vmapped program."""
+    fused = Simulator(CFG, connectome=small_connectome).run_batch(5.0, 2)
+    seq = Simulator(CFG, connectome=small_connectome,
+                    backend="instrumented").run_batch(5.0, 2)
+    assert fused.vmapped and not seq.vmapped
+    for a, b in zip(fused, seq):
+        np.testing.assert_array_equal(a["pop_counts"], b["pop_counts"])
+
+
+def test_run_batch_streams_thread_per_trial(small_connectome):
+    from repro import validate as V
+    from repro.api import spike_stats
+    c = small_connectome
+    ids = V.sample_ids(c.pop_sizes, per_pop=10, seed=0)
+    sim = Simulator(CFG, connectome=c,
+                    probes=("pop_counts", spike_stats(ids, bin_steps=20)))
+    batch = sim.run_batch(20.0, 2)
+    for trial in batch:
+        snap = trial.streams["spike_stats"]
+        assert int(snap["carry"].steps) == trial.n_steps
+    # per-trial spike totals agree between the probe carry and pop_counts
+    for trial in batch:
+        carry = trial.streams["spike_stats"]["carry"]
+        raster_total = int(np.asarray(carry.n_spikes).sum())
+        assert raster_total <= trial["pop_counts"].sum()
+    # pooled validation sums the trial moments
+    pooled = batch.pooled()
+    assert int(pooled.streams["spike_stats"]["carry"].steps) \
+        == sum(t.n_steps for t in batch)
+    report = batch.validate()
+    assert {c_.status for c_ in report.checks} <= {"pass", "fail", "skip"}
+
+
+def test_experiment_multi_trial_validates_across_trials(small_connectome):
+    exp = Experiment(model=dataclasses.replace(CFG, scale=None),
+                     duration_ms=40.0, trials=2, validate=True,
+                     sample_per_pop=10, name="mt")
+    res = exp.run(connectome=small_connectome)
+    assert len(res.trials) == 2
+    assert res.report is not None
+    assert res.summary()["n_trials"] == 2
+
+
+# the use_dc / bg_rate deprecation-shim contract is pinned in
+# tests/test_api.py::test_drive_shims_warn next to the other shims
