@@ -121,7 +121,7 @@ def print_table():
 
 
 def run_sweep(scales, strategies, t_sim_ms: float, seed: int = 3,
-              trials: int = 1):
+              trials: int = 1, plastic: bool = False):
     """Measure RTF for every strategy x scale cell; returns ledger entries.
 
     The connectome is built once per scale and shared across strategies so
@@ -129,30 +129,55 @@ def run_sweep(scales, strategies, t_sim_ms: float, seed: int = 3,
     ``trials > 1`` runs each cell through ``Simulator.run_batch`` (one
     vmapped device program on the fused backend) and records the
     per-trial RTF mean/std in the v2 ledger fields.
+
+    ``plastic`` additionally measures each cell with pair-STDP composed
+    into the fused scan (``rtf/<strategy>+pair_stdp/...`` rows) — the
+    static-vs-plastic overhead is the paper-relevant number behind its
+    closing argument (learning runs extend over hours and days of
+    biological time, so the plastic RTF is what bounds them).  Strategies
+    without a live-weight path (``dense``) skip the plastic cell.
     """
     from repro.core.connectivity import build_connectome
+    from repro.core.delivery import get_strategy
     entries = []
+
+    def measure(name, cfg, c, strategy, scale, plasticity=None):
+        sim = Simulator(cfg, connectome=c, plasticity=plasticity)
+        if trials > 1:
+            res = common.time_sim_batch(sim, t_sim_ms, trials)
+            derived = (f"rtf={res.rtf_mean:.3f};"
+                       f"rtf_std={res.rtf_std:.3f};"
+                       f"trials={trials};wall_s={res.wall_s:.2f}")
+            rtf = res.rtf_mean
+        else:
+            res = time_sim(sim, t_sim_ms)
+            derived = f"rtf={res.rtf:.3f};wall_s={res.wall_s:.2f}"
+            rtf = res.rtf
+        entry = common.make_entry(name, strategy=strategy, scale=scale,
+                                  result=res, connectome=c)
+        if plasticity is not None:
+            entry["plasticity"] = plasticity
+        entries.append(entry)
+        print(fmt_row(name, rtf * 1e6, derived))
+        return rtf
+
     for scale in scales:
         c = build_connectome(scale=scale, seed=seed)
         for strategy in strategies:
-            name = f"rtf/{strategy}/scale{scale:g}"
             cfg = MicrocircuitConfig(scale=scale, strategy=strategy,
                                      seed=seed, t_presim=0.0)
-            sim = Simulator(cfg, connectome=c)
-            if trials > 1:
-                res = common.time_sim_batch(sim, t_sim_ms, trials)
-                derived = (f"rtf={res.rtf_mean:.3f};"
-                           f"rtf_std={res.rtf_std:.3f};"
-                           f"trials={trials};wall_s={res.wall_s:.2f}")
-                rtf = res.rtf_mean
-            else:
-                res = time_sim(sim, t_sim_ms)
-                derived = f"rtf={res.rtf:.3f};wall_s={res.wall_s:.2f}"
-                rtf = res.rtf
-            entry = common.make_entry(name, strategy=strategy, scale=scale,
-                                      result=res, connectome=c)
-            entries.append(entry)
-            print(fmt_row(name, rtf * 1e6, derived))
+            rtf_static = measure(f"rtf/{strategy}/scale{scale:g}", cfg, c,
+                                 strategy, scale)
+            if plastic:
+                if not get_strategy(strategy).supports_live_weights:
+                    print(f"# rtf/{strategy}+pair_stdp/scale{scale:g}: "
+                          f"skipped ({strategy!r} has no live-weight path)")
+                    continue
+                rtf_p = measure(
+                    f"rtf/{strategy}+pair_stdp/scale{scale:g}", cfg, c,
+                    strategy, scale, plasticity="pair_stdp")
+                print(f"# plastic overhead {strategy}/scale{scale:g}: "
+                      f"{rtf_p / rtf_static:.2f}x")
     return entries
 
 
@@ -170,6 +195,11 @@ def main(argv=None) -> int:
                     help="trials per sweep cell via Simulator.run_batch "
                          "(vmapped on the fused backend); ledger entries "
                          "gain rtf_mean/rtf_std")
+    ap.add_argument("--plastic", action="store_true",
+                    help="also measure each sweep cell with pair-STDP "
+                         "composed in (rtf/<strategy>+pair_stdp/... "
+                         "entries) so the ledger records the "
+                         "static-vs-plastic RTF overhead; implies --sweep")
     ap.add_argument("--seed", type=int, default=3)
     ap.add_argument("--out", default=None, metavar="PATH",
                     help="write the measured sweep as a ledger JSON")
@@ -186,6 +216,8 @@ def main(argv=None) -> int:
                          "regression fires (default 0.5 = 50%%)")
     args = ap.parse_args(argv)
 
+    if args.plastic:
+        args.sweep = True
     if not (args.sweep or args.replay or args.compare):
         print_table()
         return 0
@@ -196,9 +228,9 @@ def main(argv=None) -> int:
         scales = [float(s) for s in args.scales.split(",") if s]
         strategies = [s for s in args.strategies.split(",") if s]
         entries = run_sweep(scales, strategies, args.t_sim, seed=args.seed,
-                            trials=args.trials)
+                            trials=args.trials, plastic=args.plastic)
         meta = {"t_sim_ms": args.t_sim, "seed": args.seed,
-                "trials": args.trials}
+                "trials": args.trials, "plastic": bool(args.plastic)}
         if args.out:
             current = common.write_ledger(args.out, entries, meta=meta)
             print(f"ledger written: {args.out} ({len(entries)} entries)")

@@ -53,6 +53,7 @@ def build_experiment(args) -> Experiment:
             n_scaling=args.scale, k_scaling=args.scale, t_sim=args.t_sim,
             t_presim=args.t_presim, strategy=args.strategy, seed=args.seed),
         stimulus=stimulus,
+        plasticity="pair_stdp" if args.stdp else None,
         duration_ms=args.t_sim,
         trials=args.trials,
         validate=bool(args.validate or args.validate_json),
@@ -94,7 +95,8 @@ def main():
                     help="Pallas kernels (interpret mode on CPU: slow, "
                          "bit-exact)")
     ap.add_argument("--stdp", action="store_true",
-                    help="compose E->E pair STDP into the loop")
+                    help="compose the pair_stdp plasticity rule (E->E "
+                         "pair STDP) into the loop")
     ap.add_argument("--validate", action="store_true",
                     help="stream spike statistics (CV-ISI, pairwise "
                          "correlation) during the run and judge them "
@@ -110,8 +112,6 @@ def main():
     sim_kwargs = {}
     if args.use_kernels:
         sim_kwargs.update(use_lif_kernel=True, use_deliver_kernel=True)
-    if args.stdp:
-        sim_kwargs["stdp"] = True
 
     t0 = time.perf_counter()
     if args.chunk > 0:

@@ -14,9 +14,10 @@ from repro.core.delivery import DeliveryOverflowError
 from repro.api.experiment import Experiment, ExperimentResult
 from repro.api.probes import (Probe, ProbeContext, StreamProbe, custom,
                               mean_plastic_weight, pop_counts, spike_stats,
-                              spikes, total_counts, voltage)
+                              spikes, total_counts, voltage, weight_stats)
 from repro.api.results import BatchResult, RunResult
 from repro.api.simulator import Simulator
+from repro.core.plasticity import PairSTDP, PlasticityRule
 from repro.core.stimulus import (DCInput, PoissonBackground, StepCurrent,
                                  Stimulus, ThalamicPulses)
 
@@ -27,6 +28,8 @@ __all__ = [
     "make_backend",
     "Probe", "ProbeContext", "StreamProbe", "custom", "mean_plastic_weight",
     "pop_counts", "spike_stats", "spikes", "total_counts", "voltage",
+    "weight_stats",
     "Stimulus", "PoissonBackground", "DCInput", "StepCurrent",
     "ThalamicPulses",
+    "PlasticityRule", "PairSTDP",
 ]

@@ -11,8 +11,8 @@ Three engines from the seed repo are adapted:
 
 * ``fused``        — the production ``lax.scan`` path (``engine.
                      update_phase`` + ``deliver_phase`` fused per step),
-                     optionally with pair-STDP composed into the loop
-                     (``stdp=`` on the Simulator),
+                     optionally with a plasticity rule composed into the
+                     loop (``plasticity=`` on the Simulator),
 * ``instrumented`` — each phase a separately jitted call with wall-clock
                      timers (absorbs the old ``engine.PhaseRunner``),
 * ``sharded``      — NEST's distribution scheme over a device mesh
@@ -30,7 +30,6 @@ checkpoint/restore uniform across engines.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import Any, Dict, Optional, Sequence, Tuple
 
@@ -156,13 +155,25 @@ class Backend:
 # ---------------------------------------------------------------------------
 
 class FusedBackend(Backend):
-    """The production path: one jitted ``lax.scan`` over the full chunk."""
+    """The production path: one jitted ``lax.scan`` over the full chunk.
+
+    ``plasticity`` composes a :class:`repro.core.plasticity.PlasticityRule`
+    into the scan: the rule is bound against the connectome at build time,
+    the delivery strategy's ``live_tables`` swaps the rule's live weight
+    view in each step, and the plastic state rides next to the simulation
+    state (checkpointed with it).  Requires a strategy with a live-weight
+    path (``event`` / ``ell``).
+    """
 
     name = "fused"
 
-    def __init__(self, stdp=None):
-        # stdp: None | STDPConfig — composes plasticity tables into the scan
-        self.stdp = stdp
+    def __init__(self, plasticity=None, stdp=None):
+        if stdp is not None:
+            if plasticity is not None:
+                raise ValueError("pass plasticity= or the deprecated "
+                                 "stdp=, not both")
+            plasticity = stdp      # resolve_rule maps STDPConfig / True
+        self.plasticity = plasticity
         self._cache: Dict[Any, Any] = {}
         self._aot: Dict[Any, Any] = {}
         self._batch_cache: Dict[Any, Any] = {}
@@ -175,29 +186,27 @@ class FusedBackend(Backend):
         self.net = prepare_network(c, cfg)
         self.n_pops = len(c.pop_sizes)
         self.drive = stim.compile_drive(cfg.stimulus, c, cfg, neuron)
-        self._plastic_tables = None
-        if self.stdp is not None:
+        self._bound = None
+        if self.plasticity is not None:
             from repro.core import plasticity as PL
-            if cfg.strategy != "event":
-                raise ValueError("stdp requires the event delivery strategy")
-            # down-scaled nets carry boosted weights: scale the STDP
-            # reference (and thus w_max / amplitudes) to match.  Kept
-            # separate from self.stdp so a rebuild doesn't compound it.
-            self._stdp_scaled = dataclasses.replace(
-                self.stdp, w_ref=self.stdp.w_ref * float(c.w_ext) / 87.8)
-            self._plastic_tables, self._plastic_state0 = \
-                PL.build_plastic_tables(c)
-            self._plastic_mask = self._plastic_tables.plastic_out.reshape(-1)
+            rule = PL.resolve_rule(self.plasticity)
+            strategy = dlv.get_strategy(cfg.strategy)
+            if not strategy.supports_live_weights:
+                raise ValueError(
+                    f"plasticity needs a delivery strategy with a "
+                    f"live-weight path (live_tables); {cfg.strategy!r} "
+                    f"has none — use 'event' or 'ell'")
+            self._bound = rule.bind(c, cfg)
 
     def init(self, key):
         sim = init_state(self.c, key, self.cfg.state_dtype)
-        if self.stdp is not None:
-            return (sim, self._plastic_state0)
+        if self._bound is not None:
+            return (sim, self._bound.state0)
         return sim
 
     def _args(self, state):
-        if self.stdp is not None:
-            return (state, self.net, self._plastic_tables)
+        if self._bound is not None:
+            return (state, self.net, self._bound.tables)
         return (state, self.net)
 
     def warmup(self, state, n_steps, probes):
@@ -232,7 +241,7 @@ class FusedBackend(Backend):
         key = (n_steps, probes)
         if key not in self._batch_cache:
             runner = self._runner(n_steps, probes)
-            n_net_args = 2 if self.stdp is not None else 1
+            n_net_args = 2 if self._bound is not None else 1
             in_axes = (0,) + (None,) * n_net_args + (0,)
             self._batch_cache[key] = jax.jit(jax.vmap(runner,
                                                       in_axes=in_axes))
@@ -285,45 +294,43 @@ class FusedBackend(Backend):
         n, n_exc, n_pops = c.n_total, c.n_exc, self.n_pops
         step_probes, stream_probes = split_probes(probes)
 
-        if self.stdp is None:
+        def stream_update(scs, spiked, ctx):
+            return tuple(p.update(sc, ctx if p.needs == "ctx" else spiked)
+                         for p, sc in zip(stream_probes, scs))
+
+        if self._bound is None:
             def runner(state, net, carries):
                 def step(carry, _):
                     sim, scs = carry
                     sim, spiked = update_phase(sim, net, prop, cfg,
                                                c.w_ext, n, drive)
                     sim = deliver_phase(sim, net, cfg, spiked, n_exc)
-                    scs = tuple(p.update(sc, spiked)
-                                for p, sc in zip(stream_probes, scs))
                     ctx = ProbeContext(sim, spiked, net, n_pops)
+                    scs = stream_update(scs, spiked, ctx)
                     return (sim, scs), tuple(p(ctx) for p in step_probes)
                 (state, carries), outs = jax.lax.scan(
                     step, (state, carries), None, length=n_steps)
                 return state, carries, outs
         else:
-            from repro.core import plasticity as PL
-            stdp_cfg, budget = self._stdp_scaled, cfg.spike_budget
-            k_out = c.targets.shape[1]
-            mask = self._plastic_mask
+            bound = self._bound
+            strategy = dlv.get_strategy(cfg.strategy)
+            mask = bound.plastic_mask
 
             def runner(state, net, tables, carries):
                 def step(carry, _):
                     (sim, ps), scs = carry
                     sim, spiked = update_phase(sim, net, prop, cfg,
                                                c.w_ext, n, drive)
-                    live = dlv.EventTables(
-                        targets=tables.out_targets,
-                        weights=PL.plastic_weight_view(ps, n, k_out),
-                        dbins=tables.out_dbins)
-                    ring, ovf = dlv.deliver_event(
-                        sim.ring, live, spiked, sim.t, n_exc, budget)
+                    live = strategy.live_tables(
+                        net.tables, bound.weight_view(ps, tables))
+                    ring, ovf = strategy.deliver(
+                        sim.ring, live, spiked, sim.t, n_exc, cfg)
                     sim = SimState(sim.neuron, ring, sim.t + 1, sim.key,
                                    sim.overflow + ovf)
-                    ps = PL.stdp_step(ps, tables, spiked, stdp_cfg,
-                                      budget, n_exc)
-                    scs = tuple(p.update(sc, spiked)
-                                for p, sc in zip(stream_probes, scs))
+                    ps = bound.step(ps, tables, spiked)
                     ctx = ProbeContext(sim, spiked, net, n_pops,
                                        plastic=ps, plastic_mask=mask)
+                    scs = stream_update(scs, spiked, ctx)
                     return ((sim, ps), scs), tuple(p(ctx)
                                                    for p in step_probes)
                 (state, carries), outs = jax.lax.scan(
@@ -351,6 +358,11 @@ class InstrumentedBackend(Backend):
         self.timers: Dict[str, float] = {}
         self._warmed: set = set()
         self._stream_cache: Dict[Any, Any] = {}
+
+    def supports_probe(self, probe):
+        # per-step dispatch feeds stream probes the bare spike vector;
+        # ctx-consuming ones (weight_stats) need the fused plastic loop
+        return not (isinstance(probe, StreamProbe) and probe.needs != "spiked")
 
     def build(self, c, cfg, neuron=None):
         cfg = resolve_sim_config(cfg, c)
@@ -510,7 +522,11 @@ class ShardedBackend(Backend):
         self.pop_of = jnp.asarray(pop_of)
 
     def supports_probe(self, probe):
-        return isinstance(probe, StreamProbe) or probe.name in self._SUPPORTED
+        if isinstance(probe, StreamProbe):
+            # the sharded scan feeds stream probes the all-gathered spike
+            # vector only; ctx-consuming probes are fused-backend features
+            return probe.needs == "spiked"
+        return probe.name in self._SUPPORTED
 
     def warmup(self, state, n_steps, probes):
         _, stream_probes = split_probes(tuple(probes))
@@ -587,21 +603,28 @@ REGISTRY = {
 }
 
 
-def make_backend(spec, *, stdp=None, n_devices=None) -> Backend:
+def make_backend(spec, *, plasticity=None, stdp=None,
+                 n_devices=None) -> Backend:
     """Resolve a backend name / instance; thread backend-specific options."""
+    if stdp is not None:
+        if plasticity is not None:
+            raise ValueError("pass plasticity= or the deprecated stdp=, "
+                             "not both")
+        plasticity = stdp
     if isinstance(spec, Backend):
-        if stdp is not None and getattr(spec, "stdp", None) is None:
-            raise ValueError("pass stdp= to the backend constructor when "
-                             "supplying a backend instance")
+        if plasticity is not None \
+                and getattr(spec, "plasticity", None) is None:
+            raise ValueError("pass plasticity= to the backend constructor "
+                             "when supplying a backend instance")
         return spec
     if spec not in REGISTRY:
         raise ValueError(f"unknown backend {spec!r}; "
                          f"available: {sorted(REGISTRY)}")
     if spec == "fused":
-        return FusedBackend(stdp=stdp)
-    if stdp is not None:
-        raise NotImplementedError(f"stdp= is only composed into the fused "
-                                  f"backend, not {spec!r}")
+        return FusedBackend(plasticity=plasticity)
+    if plasticity is not None:
+        raise NotImplementedError(f"plasticity (stdp) is only composed "
+                                  f"into the fused backend, not {spec!r}")
     if spec == "sharded":
         return ShardedBackend(n_devices=n_devices)
     return REGISTRY[spec]()

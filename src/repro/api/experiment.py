@@ -1,12 +1,14 @@
 """Declarative experiments: serializable scenario specs over the Simulator.
 
 An :class:`Experiment` is the shareable unit of scientific work on the
-microcircuit: a model config, a stimulus timeline, probes, a duration, a
-trial count and an optional validation gate — everything a Potjans–
-Diesmann protocol (background-only ground state, DC-driven control,
-thalamic pulse stimulation, multi-trial statistics) needs, as *data*.
+microcircuit: a model config, a stimulus timeline, a plasticity rule,
+probes, a duration, a trial count and an optional validation gate —
+everything a Potjans–Diesmann protocol (background-only ground state,
+DC-driven control, thalamic pulse stimulation, STDP learning runs,
+multi-trial statistics) needs, as *data*.
 ``to_dict``/``from_dict`` round-trip through the JSON schema
-``repro.experiment/v1`` so scenarios live in version control
+``repro.experiment/v2`` (v1 documents — no ``plasticity`` field — are
+still accepted) so scenarios live in version control
 (``examples/scenarios/*.json``) and run verbatim anywhere::
 
     from repro.api import Experiment
@@ -35,9 +37,13 @@ from typing import List, Optional, Sequence, Tuple
 
 from repro.api.results import BatchResult, RunResult
 from repro.configs.microcircuit import MicrocircuitConfig
+from repro.core import plasticity as plasticity_mod
 from repro.core import stimulus as stimulus_mod
 
-SCHEMA = "repro.experiment/v1"
+SCHEMA = "repro.experiment/v2"
+# v1 documents (pre-plasticity) load unchanged; a v1 document carrying a
+# plasticity field is rejected (the field is a v2 addition)
+_ACCEPTED_SCHEMAS = ("repro.experiment/v1", SCHEMA)
 
 _MODEL_FIELDS = {f.name for f in dataclasses.fields(MicrocircuitConfig)}
 
@@ -57,13 +63,16 @@ class Experiment:
     ``stimulus`` entries may be registry kind names, spec dicts, or
     :class:`~repro.core.stimulus.Stimulus` instances; an empty timeline
     means the model default (the paper's 8 Hz Poisson background).
-    ``validate`` adds a streaming ``spike_stats`` probe (``sample_per_pop``
-    neurons per population) and judges the run — pooled across trials —
-    against the published microcircuit bands.
+    ``plasticity`` is a rule kind name, spec dict or
+    :class:`~repro.core.plasticity.PlasticityRule` (``None`` = static
+    synapses).  ``validate`` adds a streaming ``spike_stats`` probe
+    (``sample_per_pop`` neurons per population) and judges the run —
+    pooled across trials — against the published microcircuit bands.
     """
     model: MicrocircuitConfig = dataclasses.field(
         default_factory=MicrocircuitConfig)
     stimulus: Tuple = ()
+    plasticity: Optional[object] = None
     probes: Tuple[str, ...] = ("pop_counts",)
     duration_ms: float = 1000.0
     trials: int = 1
@@ -77,6 +86,10 @@ class Experiment:
             self, "stimulus",
             stimulus_mod.resolve_timeline(self.stimulus) if self.stimulus
             else ())
+        if self.plasticity is not None:
+            object.__setattr__(
+                self, "plasticity",
+                plasticity_mod.resolve_rule(self.plasticity))
         object.__setattr__(self, "probes", tuple(self.probes))
         if int(self.trials) < 1:
             raise ValueError(f"trials must be >= 1, got {self.trials}")
@@ -99,6 +112,8 @@ class Experiment:
             "name": self.name,
             "model": model,
             "stimulus": [s.to_dict() for s in self.stimulus],
+            "plasticity": (None if self.plasticity is None
+                           else self.plasticity.to_dict()),
             "probes": list(self.probes),
             "duration_ms": float(self.duration_ms),
             "trials": int(self.trials),
@@ -111,9 +126,13 @@ class Experiment:
     def from_dict(cls, d: dict) -> "Experiment":
         d = dict(d)
         schema = d.pop("schema", None)
-        if schema != SCHEMA:
+        if schema not in _ACCEPTED_SCHEMAS:
             raise ValueError(f"unknown experiment schema {schema!r} "
-                             f"(expected {SCHEMA!r})")
+                             f"(accepted: {list(_ACCEPTED_SCHEMAS)})")
+        if schema != SCHEMA and d.get("plasticity") is not None:
+            raise ValueError(
+                f"the plasticity field is a {SCHEMA!r} addition; this "
+                f"document declares {schema!r} — bump its schema")
         known = {f.name for f in dataclasses.fields(cls)}
         unknown = set(d) - known
         if unknown:
@@ -124,8 +143,10 @@ class Experiment:
         if "stimulus" in d:
             d["stimulus"] = tuple(
                 stimulus_mod.Stimulus.from_dict(s) for s in d["stimulus"])
-        if "probes" in d:
-            d["probes"] = tuple(d["probes"])
+        if d.get("plasticity") is not None:
+            # resolve_rule accepts both the serialized spec dict and the
+            # bare kind-name string the Python constructor documents
+            d["plasticity"] = plasticity_mod.resolve_rule(d["plasticity"])
         return cls(**d)
 
     def to_json(self, path: Optional[str] = None, indent: int = 2) -> str:
@@ -172,7 +193,8 @@ class Experiment:
                 spike_stats(ids, bin_steps=max(1, round(2.0 / model.dt))))
         return Simulator(model, connectome=connectome,
                          backend=self.backend, probes=probes,
-                         stimulus=self.stimulus or None, **sim_kwargs)
+                         stimulus=self.stimulus or None,
+                         plasticity=self.plasticity, **sim_kwargs)
 
     def run(self, *, connectome=None, warmup: bool = False,
             **sim_kwargs) -> "ExperimentResult":

@@ -12,7 +12,9 @@ Built-ins::
     spikes()              [T, N] bool raster (memory-heavy at scale)
     total_counts()        [T] int32 network-wide spike count
     voltage(ids=None)     [T, len(ids)] membrane potentials (all N if None)
-    mean_plastic_weight() [T] mean E->E weight (requires stdp=...)
+    mean_plastic_weight() [T] mean plastic weight (requires plasticity=...)
+    weight_stats()        streamed mean/std/min/max of the plastic weights
+                          (a StreamProbe; requires plasticity=...)
     custom(name, fn)      any reducer ``fn(ctx) -> array``
 
 ``ctx`` is a :class:`ProbeContext` with the post-step state, this step's
@@ -22,10 +24,15 @@ composed in) the plastic state.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple, Optional, Sequence, Union
+from typing import (TYPE_CHECKING, Callable, NamedTuple, Optional, Sequence,
+                    Union)
 
 import jax
 import jax.numpy as jnp
+
+if TYPE_CHECKING:
+    from repro.core.engine import Network, SimState
+    from repro.core.plasticity import PlasticState
 
 
 class ProbeContext(NamedTuple):
@@ -34,8 +41,8 @@ class ProbeContext(NamedTuple):
     spiked: jnp.ndarray         # [N] bool, this step's spikes
     net: "Network"              # device tables (pop_of, k_ext, ...)
     n_pops: int                 # static population count
-    plastic: Optional["PlasticState"] = None   # STDP runs only
-    plastic_mask: Optional[jnp.ndarray] = None  # [n_syn] bool, E->E synapses
+    plastic: Optional["PlasticState"] = None   # plasticity-enabled runs only
+    plastic_mask: Optional[jnp.ndarray] = None  # [n_syn] bool, plastic synapses
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,12 +87,12 @@ def voltage(ids: Optional[Sequence[int]] = None) -> Probe:
 
 
 def mean_plastic_weight() -> Probe:
-    """Mean weight over the plastic (E->E) synapses; needs ``stdp=``."""
+    """Mean weight over the plastic synapses; needs ``plasticity=``."""
     def fn(ctx: ProbeContext) -> jnp.ndarray:
         if ctx.plastic is None:
             raise ValueError(
-                "mean_plastic_weight probe requires an STDP-enabled run "
-                "(pass stdp=... to Simulator)")
+                "mean_plastic_weight probe requires a plasticity-enabled "
+                "run (pass plasticity=... to Simulator)")
         mask = ctx.plastic_mask
         n_plastic = jnp.maximum(mask.sum(), 1)
         w = ctx.plastic.weights[:mask.shape[0]]
@@ -117,11 +124,18 @@ class StreamProbe:
 
     Equality is identity (``eq=False``): backend compile caches are keyed
     on probe instances, so reuse one instance across runs of a session.
+
+    ``needs`` declares what ``update`` consumes: ``"spiked"`` (the
+    default) receives the global spike vector and runs on every backend
+    (the sharded engine feeds it the all-gathered registry); ``"ctx"``
+    receives the full :class:`ProbeContext` (plastic state included) and
+    is restricted to backends that build one per step (fused).
     """
     name: str
     init: Callable[[], object]
     update: Callable[[object, jnp.ndarray], object]
     meta: dict = dataclasses.field(default_factory=dict)
+    needs: str = "spiked"          # "spiked" | "ctx"
 
 
 def spike_stats(ids, bin_steps: int = 20,
@@ -160,6 +174,43 @@ def spike_stats(ids, bin_steps: int = 20,
                        meta={"ids": ids, "bin_steps": bin_steps})
 
 
+def weight_stats(name: str = "weight_stats") -> StreamProbe:
+    """Streaming mean/std/min/max of the plastic weights, in-scan.
+
+    The long-horizon learning record: the carry holds the plastic-weight
+    distribution statistics of the *last completed step* (plus the step
+    count), so a chunked run's per-chunk ``RunResult.streams`` snapshots
+    trace the weight trajectory at chunk resolution without ever
+    materialising per-step O(n_syn) data.  Requires a plasticity-enabled
+    run on a context-passing backend (``Simulator(plasticity=...)``,
+    fused); backends that feed stream probes the bare spike vector reject
+    it at session construction.
+    """
+    def init():
+        z = jnp.zeros((), jnp.float32)
+        return {"steps": jnp.zeros((), jnp.int32),
+                "mean": z, "std": z, "min": z, "max": z}
+
+    def update(carry, ctx):
+        if not isinstance(ctx, ProbeContext) or ctx.plastic is None:
+            raise ValueError(
+                "weight_stats probe requires a plasticity-enabled run "
+                "(pass plasticity=... to Simulator, fused backend)")
+        mask = ctx.plastic_mask
+        w = ctx.plastic.weights[:mask.shape[0]].astype(jnp.float32)
+        n_p = jnp.maximum(mask.sum(), 1).astype(jnp.float32)
+        mean = jnp.sum(jnp.where(mask, w, 0.0)) / n_p
+        var = jnp.sum(jnp.where(mask, (w - mean) ** 2, 0.0)) / n_p
+        inf = jnp.asarray(jnp.inf, w.dtype)
+        return {"steps": carry["steps"] + 1,
+                "mean": mean, "std": jnp.sqrt(var),
+                "min": jnp.min(jnp.where(mask, w, inf)),
+                "max": jnp.max(jnp.where(mask, w, -inf))}
+
+    return StreamProbe(name=name, init=init, update=update,
+                       meta={"kind": "weight_stats"}, needs="ctx")
+
+
 def split_probes(probes: Sequence) -> tuple:
     """(per-step Probes, StreamProbes) partition, order-preserving."""
     step = tuple(p for p in probes if isinstance(p, Probe))
@@ -173,6 +224,7 @@ _BUILTIN = {
     "total_counts": total_counts,
     "voltage": voltage,
     "mean_plastic_weight": mean_plastic_weight,
+    "weight_stats": weight_stats,
 }
 
 ProbeLike = Union[str, Probe, "StreamProbe"]

@@ -69,9 +69,17 @@ class Simulator:
         default (``None``) is the paper's 8 Hz ``poisson_background``;
         an explicit timeline *replaces* it, so include the background
         entry when stimulation should ride on top of it.
+    plasticity:
+        Declarative plasticity rule: a registry kind name
+        (``"pair_stdp"``), a spec dict (``{"kind": "pair_stdp", ...}``),
+        or a :class:`~repro.core.plasticity.PlasticityRule` instance.
+        Composed into the fused engine loop via the delivery strategy's
+        live-weight path (``event`` / ``ell``); the plastic state rides
+        with the session state through ``run_chunked`` and
+        checkpoint/restore bitwise.
     stdp:
-        ``True`` or an ``STDPConfig`` — composes pair-STDP into the fused
-        engine loop.
+        Deprecated alias: ``True`` or an ``STDPConfig`` — use
+        ``plasticity=`` instead.
     sim_config:
         Explicit :class:`SimConfig`; otherwise derived from ``config`` and
         ``**overrides`` (e.g. ``use_lif_kernel=True``).
@@ -79,7 +87,7 @@ class Simulator:
 
     def __init__(self, config=None, *, connectome: Optional[Connectome] = None,
                  backend="fused", probes: Sequence = ("pop_counts",),
-                 stimulus=None, stdp=None,
+                 stimulus=None, plasticity=None, stdp=None,
                  neuron: Optional[NeuronParams] = None,
                  sim_config: Optional[SimConfig] = None, key=None,
                  n_devices: Optional[int] = None, **overrides):
@@ -111,10 +119,20 @@ class Simulator:
         self.sim_config = sim_config
         self.t_presim = float(getattr(config, "t_presim", 0.0))
 
-        if stdp is True:
-            from repro.core.plasticity import STDPConfig
-            stdp = STDPConfig(dt=sim_config.dt)
-        self.backend: Backend = make_backend(backend, stdp=stdp,
+        if stdp is not None:
+            warnings.warn(
+                "the stdp= argument is deprecated; pass plasticity= "
+                "(e.g. plasticity='pair_stdp', or a PlasticityRule)",
+                DeprecationWarning, stacklevel=2)
+            if plasticity is not None:
+                raise ValueError("pass plasticity= or the deprecated "
+                                 "stdp=, not both")
+            plasticity = stdp      # resolve_rule maps True / STDPConfig
+        if plasticity is not None:
+            from repro.core.plasticity import resolve_rule
+            plasticity = resolve_rule(plasticity)
+        self.plasticity = plasticity
+        self.backend: Backend = make_backend(backend, plasticity=plasticity,
                                              n_devices=n_devices)
         self.backend.build(connectome, sim_config, neuron)
         # backends resolve the config (auto spike budget etc.); expose it

@@ -233,12 +233,29 @@ class DeliveryStrategy:
     def supports_sharding(self) -> bool:
         return False
 
+    #: True when ``live_tables`` is implemented — the plasticity subsystem
+    #: (``Simulator(plasticity=...)``) needs a strategy whose weights can
+    #: be swapped per step.
+    supports_live_weights: bool = False
+
     # -- traced hot path ----------------------------------------------------
     def deliver(self, ring: jnp.ndarray, tables: Any, spiked: jnp.ndarray,
                 t: jnp.ndarray, n_exc: int, cfg
                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Scatter one step's spikes. Returns (ring', n_overflow)."""
         raise NotImplementedError
+
+    def live_tables(self, tables: Any, weights: jnp.ndarray) -> Any:
+        """Per-step view of ``tables`` with live ``weights`` swapped in.
+
+        ``weights`` is the canonical ``[N+1, K]`` plastic weight view (a
+        plasticity rule's ``weight_view``); the returned pytree feeds
+        ``deliver`` for this step.  Traced inside the scan — must be a
+        cheap re-wrapping (replace/pad), never a host-side rebuild.
+        """
+        raise NotImplementedError(
+            f"delivery strategy {self.name!r} has no live-weight path "
+            f"(live_tables); plasticity requires 'event' or 'ell'")
 
 
 REGISTRY: Dict[str, DeliveryStrategy] = {}
@@ -305,9 +322,15 @@ class EventDelivery(DeliveryStrategy):
     def supports_sharding(self) -> bool:
         return True
 
+    supports_live_weights = True
+
     def deliver(self, ring, tables, spiked, t, n_exc, cfg):
         return deliver_event(ring, tables, spiked, t, n_exc,
                              _require_budget(cfg))
+
+    def live_tables(self, tables: EventTables,
+                    weights: jnp.ndarray) -> EventTables:
+        return tables._replace(weights=weights)
 
 
 @register
@@ -394,6 +417,18 @@ class EllDelivery(DeliveryStrategy):
     @property
     def supports_sharding(self) -> bool:
         return True
+
+    supports_live_weights = True
+
+    def live_tables(self, tables: EventTables,
+                    weights: jnp.ndarray) -> EventTables:
+        """Pad the canonical [N+1, K] live weights to this strategy's
+        lane-aligned K (padded columns already point at the dump slot)."""
+        k_pad = tables.targets.shape[1]
+        k = weights.shape[1]
+        if k_pad != k:
+            weights = jnp.pad(weights, ((0, 0), (0, k_pad - k)))
+        return tables._replace(weights=weights)
 
     def deliver(self, ring, tables, spiked, t, n_exc, cfg):
         budget = _require_budget(cfg)

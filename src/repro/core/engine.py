@@ -21,7 +21,10 @@ benchmark harness can reproduce the paper's phase-breakdown measurement.
     callers; new code should drive runs through ``repro.api.Simulator``
     (``backend="fused"`` / ``backend="instrumented"``), which adds probes,
     chunked long runs, checkpointing, and RTF accounting on top of the
-    same phase functions.
+    same phase functions.  Plasticity composes at that layer too: the
+    fused backend swaps the bound rule's live weight view into the
+    delivery step (``DeliveryStrategy.live_tables``) and advances the
+    plastic state next to ``SimState`` — see ``repro.core.plasticity``.
 """
 from __future__ import annotations
 

@@ -1,44 +1,71 @@
-"""Pair-based STDP on the event-driven engine.
+"""Plasticity rules: a pluggable protocol plus a registry.
 
 The paper's closing argument for explicit synapse storage is that
-"plasticity and learning are possible in this representation" — this module
-makes that concrete.  Classic trace-based pair STDP (Morrison et al. 2008):
+"plasticity and learning are possible in this representation" — and that
+sub-realtime performance matters precisely because learning extends over
+hours and days of biological time.  This module makes both concrete: a
+plasticity rule is a small frozen dataclass registered under a ``kind``
+string (mirroring the delivery/stimulus registries), serializable to/from
+JSON (``repro.api.experiment`` embeds it in scenario files), and *bound*
+once per session against a connectome into device tables plus a pure
+per-step update the fused engine evaluates inside its scan.
 
-    x_pre  += 1 on pre spike,  decays with tau_plus
-    x_post += 1 on post spike, decays with tau_minus
-    on pre spike  at synapse (i->j):  w -= lr * A_minus * x_post[j]  (depress)
-    on post spike at synapse (i->j):  w += lr * A_plus  * x_pre[i]   (potentiate)
+Built-in registry entry::
 
-TPU adaptation: NEST walks per-synapse spike histories pointer-wise; here
-both update directions run as *budgeted row updates* — the pre-spike pass
-gathers the (already materialised) OUT-adjacency rows, the post-spike pass
-gathers a transposed IN-adjacency built once at instantiation, and both
-scatter weight deltas back with one `.at[].add`.  Shapes are static
-(spike budget S), so the whole plastic simulation stays one fused scan.
+    pair_stdp(...)    classic trace-based pair STDP on the E->E synapses
+                      (Morrison et al. 2008)
 
-Excitatory weights clip to [0, w_max]; inhibitory synapses are kept static
-(the microcircuit's STDP studies plasticise E->E synapses only).
+Custom rules subclass :class:`PlasticityRule` under ``@register("name")``.
+
+Binding contract (what the fused backend consumes)
+--------------------------------------------------
+``rule.bind(c, cfg)`` returns a :class:`BoundPlasticity`-shaped object:
+
+* ``tables``   — device-resident static tables (any pytree); threaded as a
+  runtime argument of the jitted scan (not a traced constant),
+* ``state0``   — the initial plastic state (pytree; checkpointed with the
+  simulation state, so long-horizon runs survive save/restore bitwise),
+* ``plastic_mask`` — flat ``[n_syn]`` bool marking the plastic synapses
+  (consumed by the ``mean_plastic_weight`` / ``weight_stats`` probes),
+* ``weight_view(state, tables)`` — the live ``[N+1, K]`` weight table the
+  delivery strategy swaps in each step (``DeliveryStrategy.live_tables``),
+* ``step(state, tables, spiked)`` — one traced plastic update given this
+  step's spike vector.
+
+The pair-STDP TPU adaptation: NEST walks per-synapse spike histories
+pointer-wise; here both update directions run as *budgeted row updates* —
+the pre-spike pass gathers the (already materialised) OUT-adjacency rows,
+the post-spike pass gathers a transposed IN-adjacency built once at bind
+time, and both scatter weight deltas back with one ``.at[].add``.  Shapes
+are static (spike budget S), so the whole plastic simulation stays one
+fused scan.  Plastic (E->E) weights clip to [0, w_max]; every other
+synapse — inhibitory rows *and* static E->I synapses — is never mutated.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Tuple
+import warnings
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.connectivity import Connectome
 
+_W_REF_FULL = 87.8     # pA reference weight at full scale (0.15 mV PSP)
+
 
 @dataclasses.dataclass(frozen=True)
 class STDPConfig:
+    """Parameter bundle of the pair-STDP update (kept for direct
+    ``stdp_step`` callers and as the ``Simulator(stdp=...)`` shim input;
+    new code declares a :class:`PairSTDP` registry rule instead)."""
     tau_plus: float = 20.0     # ms, pre-trace
     tau_minus: float = 20.0    # ms, post-trace
     A_plus: float = 0.01
     A_minus: float = 0.012     # slight depression bias (stability)
     lr: float = 1.0            # scales both amplitudes (units of w_ref)
-    w_ref: float = 87.8        # pA reference weight (PSC of 0.15 mV PSP)
+    w_ref: float = _W_REF_FULL # pA reference weight (PSC of 0.15 mV PSP)
     w_max_factor: float = 3.0  # clip at w_max_factor * w_ref
     dt: float = 0.1
 
@@ -58,7 +85,7 @@ class PlasticTables(NamedTuple):
 
 
 class PlasticState(NamedTuple):
-    weights: jnp.ndarray        # [(N+1) * K_out] f32 flat canonical weights
+    weights: jnp.ndarray        # [(N+1) * K_out + 1] f32 flat canonical
     x_pre: jnp.ndarray          # [N] f32
     x_post: jnp.ndarray         # [N] f32
 
@@ -114,8 +141,19 @@ def build_plastic_tables(c: Connectome) -> Tuple[PlasticTables, PlasticState]:
 
 
 def stdp_step(ps: PlasticState, tables: PlasticTables, spiked: jnp.ndarray,
-              cfg: STDPConfig, spike_budget: int, n_exc: int):
-    """One plasticity step given this step's spike vector. Returns state'."""
+              cfg: STDPConfig, spike_budget: int, n_exc: int,
+              clip_mask: Optional[jnp.ndarray] = None):
+    """One plasticity step given this step's spike vector. Returns state'.
+
+    ``n_exc`` is retained for signature compatibility; the clip is driven
+    by the plastic mask (clipping whole excitatory rows, as earlier
+    revisions did, silently mutated static E->I weights whenever they
+    exceeded ``w_max`` — pinned by a regression test).  ``clip_mask`` is
+    the weights-length padded plastic mask; pass the one precomputed at
+    bind time (``_BoundPairSTDP``) to keep the derivation out of the scan
+    body — ``None`` derives it from ``tables`` (same values).
+    """
+    del n_exc
     n = spiked.shape[0]
     k_out = tables.out_targets.shape[1]
     decay_p = float(np.exp(-cfg.dt / cfg.tau_plus))
@@ -142,10 +180,11 @@ def stdp_step(ps: PlasticState, tables: PlasticTables, spiked: jnp.ndarray,
     w = ps.weights
     w = w.at[syn.reshape(-1)].add(dw_dep.reshape(-1), mode="drop")
     w = w.at[syn_in.reshape(-1)].add(dw_pot.reshape(-1), mode="drop")
-    # clip plastic (E->E) weights into [0, w_max]; cheap to clip all exc rows
-    w = jnp.clip(w, max=w_max)
-    w = jnp.where(jnp.arange(w.shape[0]) < n_exc * k_out,
-                  jnp.maximum(w, 0.0), w)
+    # clip ONLY the plastic (E->E) synapses into [0, w_max]; every static
+    # weight must pass through bitwise untouched
+    if clip_mask is None:
+        clip_mask = _padded_clip_mask(tables, w.shape[0])
+    w = jnp.where(clip_mask, jnp.clip(w, 0.0, w_max), w)
 
     spk = spiked.astype(jnp.float32)
     x_pre = ps.x_pre * decay_p + spk
@@ -153,61 +192,223 @@ def stdp_step(ps: PlasticState, tables: PlasticTables, spiked: jnp.ndarray,
     return PlasticState(w, x_pre, x_post)
 
 
+def _padded_clip_mask(tables: PlasticTables, n_weights: int) -> jnp.ndarray:
+    """Plastic mask padded to the flat weight-array length."""
+    flat = tables.plastic_out.reshape(-1)
+    pad = n_weights - flat.shape[0]
+    return jnp.concatenate([flat, jnp.zeros((pad,), bool)]) if pad else flat
+
+
 def plastic_weight_view(ps: PlasticState, n: int, k_out: int) -> jnp.ndarray:
-    """[N+1, K_out] weight table view for the event delivery gather."""
+    """[N+1, K_out] weight table view for the delivery live-weight path."""
     return ps.weights[:(n + 1) * k_out].reshape(n + 1, k_out)
 
 
+# ---------------------------------------------------------------------------
+# The rule protocol and registry
+# ---------------------------------------------------------------------------
+
+REGISTRY: Dict[str, type] = {}
+
+
+def register(kind: str):
+    """Class decorator: register a :class:`PlasticityRule` under ``kind``."""
+    def deco(cls):
+        if not (isinstance(cls, type) and issubclass(cls, PlasticityRule)):
+            raise TypeError(f"@register({kind!r}) needs a PlasticityRule "
+                            f"subclass, got {cls!r}")
+        if kind in REGISTRY:
+            raise ValueError(f"plasticity rule {kind!r} already registered")
+        cls.kind = kind
+        REGISTRY[kind] = cls
+        return cls
+    return deco
+
+
+def available_rules() -> Tuple[str, ...]:
+    return tuple(sorted(REGISTRY))
+
+
+@dataclasses.dataclass(frozen=True)
+class PlasticityRule:
+    """One synaptic plasticity mechanism, as data.
+
+    Subclasses are frozen dataclasses of plain JSON-able parameters,
+    registered under ``@register("kind")``; ``bind`` lowers the rule
+    against a connectome + resolved ``SimConfig`` into the device tables
+    and traced per-step update the fused backend composes into its scan
+    (see the module docstring for the bound contract).
+    """
+
+    kind = "abstract"     # set by @register
+
+    # -- host side ----------------------------------------------------------
+    def bind(self, c: Connectome, cfg) -> "BoundPlasticity":
+        raise NotImplementedError
+
+    # -- serialization (repro.experiment/v2 scenario files) ----------------
+    def to_dict(self) -> dict:
+        return {"kind": self.kind, **dataclasses.asdict(self)}
+
+    @staticmethod
+    def from_dict(d: dict) -> "PlasticityRule":
+        d = dict(d)
+        kind = d.pop("kind", None)
+        if kind not in REGISTRY:
+            raise ValueError(f"unknown plasticity rule kind {kind!r}; "
+                             f"available: {available_rules()}")
+        cls = REGISTRY[kind]
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown field(s) {sorted(unknown)} for "
+                             f"plasticity rule {kind!r} "
+                             f"(known: {sorted(known)})")
+        return cls(**d)
+
+
+class BoundPlasticity:
+    """Protocol shape of ``rule.bind(...)`` results (duck-typed; custom
+    rules may return any object with these members)."""
+
+    tables: Any = None
+    state0: Any = None
+    plastic_mask: Optional[jnp.ndarray] = None
+
+    def step(self, state, tables, spiked):
+        raise NotImplementedError
+
+    def weight_view(self, state, tables) -> jnp.ndarray:
+        raise NotImplementedError
+
+
+def resolve_rule(spec) -> PlasticityRule:
+    """Normalise a rule spec: registry kind name, spec dict (``{"kind":
+    ..., **params}``), :class:`PlasticityRule` instance, ``True`` (the
+    default :class:`PairSTDP`), or a legacy :class:`STDPConfig`."""
+    if isinstance(spec, PlasticityRule):
+        return spec
+    if spec is True:
+        return PairSTDP()
+    if isinstance(spec, STDPConfig):
+        return PairSTDP.from_stdp_config(spec)
+    if isinstance(spec, str):
+        if spec not in REGISTRY:
+            raise ValueError(f"unknown plasticity rule {spec!r}; "
+                             f"available: {available_rules()}")
+        return REGISTRY[spec]()
+    if isinstance(spec, dict):
+        return PlasticityRule.from_dict(spec)
+    raise TypeError(f"plasticity must be a rule kind name, spec dict, "
+                    f"PlasticityRule, True, or STDPConfig; got {type(spec)}")
+
+
+# ---------------------------------------------------------------------------
+# Registered implementations
+# ---------------------------------------------------------------------------
+
+class _BoundPairSTDP(BoundPlasticity):
+    """Pair STDP lowered against a connectome (scaled config + tables)."""
+
+    def __init__(self, cfg: STDPConfig, tables: PlasticTables,
+                 state0: PlasticState, n: int, k_out: int, n_exc: int,
+                 spike_budget: int):
+        self.cfg = cfg
+        self.tables = tables
+        self.state0 = state0
+        self.plastic_mask = tables.plastic_out.reshape(-1)
+        self.clip_mask = _padded_clip_mask(tables, state0.weights.shape[0])
+        self.n, self.k_out, self.n_exc = n, k_out, n_exc
+        self.spike_budget = int(spike_budget)
+
+    def step(self, state, tables, spiked):
+        return stdp_step(state, tables, spiked, self.cfg,
+                         self.spike_budget, self.n_exc,
+                         clip_mask=self.clip_mask)
+
+    def weight_view(self, state, tables):
+        return plastic_weight_view(state, self.n, self.k_out)
+
+
+@register("pair_stdp")
+@dataclasses.dataclass(frozen=True)
+class PairSTDP(PlasticityRule):
+    """Classic trace-based pair STDP on the E->E synapses::
+
+        x_pre  += 1 on pre spike,  decays with tau_plus
+        x_post += 1 on post spike, decays with tau_minus
+        on pre spike  at (i->j):  w -= lr * A_minus * x_post[j]  (depress)
+        on post spike at (i->j):  w += lr * A_plus  * x_pre[i]   (potentiate)
+
+    ``w_ref`` is the full-scale reference weight; binding scales it by the
+    connectome's actual external weight (down-scaled nets carry
+    1/sqrt(K_scaling)-boosted weights), so w_max and the amplitudes track
+    the scale automatically.  ``dt=None`` (the default) takes the
+    simulation step from the session's ``SimConfig``.
+    """
+    tau_plus: float = 20.0
+    tau_minus: float = 20.0
+    A_plus: float = 0.01
+    A_minus: float = 0.012
+    lr: float = 1.0
+    w_ref: float = _W_REF_FULL
+    w_max_factor: float = 3.0
+    dt: Optional[float] = None
+
+    @classmethod
+    def from_stdp_config(cls, cfg: STDPConfig) -> "PairSTDP":
+        return cls(tau_plus=cfg.tau_plus, tau_minus=cfg.tau_minus,
+                   A_plus=cfg.A_plus, A_minus=cfg.A_minus, lr=cfg.lr,
+                   w_ref=cfg.w_ref, w_max_factor=cfg.w_max_factor,
+                   dt=cfg.dt)
+
+    def bind(self, c: Connectome, cfg) -> _BoundPairSTDP:
+        if cfg.spike_budget is None:
+            raise ValueError(
+                "SimConfig.spike_budget is unresolved; call "
+                "repro.core.engine.resolve_sim_config(cfg, connectome) "
+                "first — the api backends do this in build()")
+        scaled = STDPConfig(
+            tau_plus=self.tau_plus, tau_minus=self.tau_minus,
+            A_plus=self.A_plus, A_minus=self.A_minus, lr=self.lr,
+            # down-scaled nets carry boosted weights: scale the reference
+            # (and thus w_max / amplitudes) to match
+            w_ref=self.w_ref * float(c.w_ext) / _W_REF_FULL,
+            w_max_factor=self.w_max_factor,
+            dt=cfg.dt if self.dt is None else self.dt)
+        tables, state0 = build_plastic_tables(c)
+        return _BoundPairSTDP(scaled, tables, state0, c.n_total,
+                              c.targets.shape[1], c.n_exc,
+                              int(cfg.spike_budget))
+
+
+# ---------------------------------------------------------------------------
+# Deprecated front-end
+# ---------------------------------------------------------------------------
+
 def simulate_plastic(c: Connectome, t_sim_ms: float, sim_cfg, stdp_cfg,
                      key=None):
-    """Microcircuit simulation with live E->E STDP (event strategy).
+    """Microcircuit simulation with live E->E STDP.
 
     Returns (final_sim_state, final_plastic_state, recorded) where recorded
-    = (pop_counts [T, 8], mean plastic weight [T]).
+    = (pop_counts [T, n_pops], mean plastic weight [T]).
+
+    .. deprecated:: thin shim over ``repro.api.Simulator(plasticity=...)``
+       — the session API adds delivery-strategy choice (event/ell),
+       chunked long runs, checkpoint/restore and stream probes on top of
+       the same trajectory (bitwise, pinned by the shim test).
     """
-    import functools
+    warnings.warn(
+        "simulate_plastic is deprecated; use repro.api.Simulator("
+        "plasticity='pair_stdp') — the session API composes the same "
+        "rule with run_chunked, checkpointing and stream probes",
+        DeprecationWarning, stacklevel=2)
+    from repro.api.simulator import Simulator
 
-    from repro.core import delivery as dlv
-    from repro.core.engine import (SimState, init_state, prepare_network,
-                                   resolve_sim_config, update_phase)
-    from repro.core.neuron import NeuronParams, Propagators
-
-    assert sim_cfg.strategy == "event"
-    sim_cfg = resolve_sim_config(sim_cfg, c)    # auto spike budget
-    # down-scaled nets carry 1/sqrt(K_scaling)-boosted weights: scale the
-    # STDP reference (and thus w_max / amplitudes) to match
-    stdp_cfg = dataclasses.replace(
-        stdp_cfg, w_ref=stdp_cfg.w_ref * float(c.w_ext) / 87.8)
-    prop = Propagators.make(NeuronParams(), sim_cfg.dt)
-    net = prepare_network(c, sim_cfg)
-    sim0 = init_state(c, key)
-    tables, ps0 = build_plastic_tables(c)
-    n, k_out = c.n_total, c.targets.shape[1]
-    plastic_mask = tables.plastic_out.reshape(-1)
-    n_plastic = jnp.maximum(plastic_mask.sum(), 1)
-
-    def step(carry, _):
-        sim, ps = carry
-        sim, spiked = update_phase(sim, net, prop, sim_cfg, c.w_ext, n)
-        live = dlv.EventTables(
-            targets=tables.out_targets,
-            weights=plastic_weight_view(ps, n, k_out),
-            dbins=tables.out_dbins)
-        ring, ovf = dlv.deliver_event(
-            sim.ring, live, spiked, sim.t, c.n_exc, sim_cfg.spike_budget)
-        sim = SimState(sim.neuron, ring, sim.t + 1, sim.key,
-                       sim.overflow + ovf)
-        ps = stdp_step(ps, tables, spiked, stdp_cfg,
-                       sim_cfg.spike_budget, c.n_exc)
-        counts = jax.ops.segment_sum(spiked.astype(jnp.int32), net.pop_of,
-                                     num_segments=len(c.pop_sizes),
-                                     indices_are_sorted=True)
-        mean_w = jnp.sum(jnp.where(
-            plastic_mask, ps.weights[:plastic_mask.shape[0]],
-            0.0)) / n_plastic
-        return (sim, ps), (counts, mean_w)
-
-    n_steps = int(round(t_sim_ms / sim_cfg.dt))
-    (sim_f, ps_f), rec = jax.lax.scan(step, (sim0, ps0), None,
-                                      length=n_steps)
-    return sim_f, ps_f, rec
+    rule = PairSTDP.from_stdp_config(stdp_cfg)
+    sim = Simulator(connectome=c, sim_config=sim_cfg, plasticity=rule,
+                    probes=("pop_counts", "mean_plastic_weight"), key=key)
+    res = sim.run(t_sim_ms)
+    sim_f, ps_f = sim.state
+    return sim_f, ps_f, (res.data["pop_counts"],
+                         res.data["mean_plastic_weight"])

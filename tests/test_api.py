@@ -116,8 +116,8 @@ def test_probe_shapes_and_custom(smoke_c):
                                   res["spikes"].sum(axis=1))
 
 
-def test_stdp_composes_into_fused_backend(smoke_c):
-    sim = Simulator(CFG, connectome=smoke_c, stdp=True,
+def test_plasticity_composes_into_fused_backend(smoke_c):
+    sim = Simulator(CFG, connectome=smoke_c, plasticity="pair_stdp",
                     probes=("pop_counts", "mean_plastic_weight"))
     res = sim.run(30.0)
     mw = res["mean_plastic_weight"]
@@ -135,7 +135,7 @@ def test_probe_validation_errors(smoke_c):
                   probes=("voltage",))
     with pytest.raises(NotImplementedError, match="stdp"):
         Simulator(CFG, connectome=smoke_c, backend="instrumented",
-                  stdp=True)
+                  plasticity="pair_stdp")
 
 
 def test_state_dtype_threads_through(smoke_c):

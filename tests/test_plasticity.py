@@ -1,4 +1,6 @@
-"""STDP: pair-protocol causality, bounds, network-level stability."""
+"""Plasticity subsystem: pair-STDP protocol physics, the rule registry,
+delivery-strategy-generic live weights, and long-horizon session support
+(chunked runs + checkpoint round-trips)."""
 import dataclasses
 
 import jax
@@ -6,6 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.api import Simulator
 from repro.core import SimConfig, build_connectome
 from repro.core import plasticity as P
 
@@ -95,8 +98,9 @@ def test_network_stable_under_stdp():
     """Full plastic simulation keeps firing and stays finite."""
     c = build_connectome(n_scaling=0.02, k_scaling=0.02, seed=7)
     cfg = SimConfig(strategy="event", spike_budget=256)
-    sim, ps, (counts, mean_w) = P.simulate_plastic(
-        c, 200.0, cfg, P.STDPConfig(), key=jax.random.PRNGKey(0))
+    with pytest.warns(DeprecationWarning, match="simulate_plastic"):
+        sim, ps, (counts, mean_w) = P.simulate_plastic(
+            c, 200.0, cfg, P.STDPConfig(), key=jax.random.PRNGKey(0))
     counts = np.asarray(counts)
     assert int(sim.overflow) == 0
     assert np.isfinite(np.asarray(ps.weights)).all()
@@ -105,3 +109,262 @@ def test_network_stable_under_stdp():
     assert np.isfinite(mw).all()
     # bounded drift over 0.2 s
     assert abs(mw[-1] - mw[0]) < 0.2 * abs(mw[0])
+
+
+# ---------------------------------------------------------------------------
+# The clip-mask regression (static weights must never be mutated)
+# ---------------------------------------------------------------------------
+
+def test_static_weights_survive_aggressive_clip():
+    """Regression: with w_max *below* the static weight scale, the clip
+    must still touch only the plastic (E->E) synapses — the earlier
+    whole-excitatory-row clip silently flattened static E->I weights to
+    w_max on the first step."""
+    c, tables, state = two_neuron_setup()
+    # w_max = 0.4 * w_ref < typical static weight (~w_ref): any clip leak
+    # onto non-plastic synapses is guaranteed to show
+    cfg = P.STDPConfig(w_ref=float(c.w_ext), w_max_factor=0.4)
+    all_exc = jnp.zeros(c.n_total, bool).at[:c.n_exc].set(True)
+    w0 = np.asarray(state.weights).copy()
+    step = jax.jit(lambda s: P.stdp_step(s, tables, all_exc, cfg, 512,
+                                         c.n_exc))
+    for _ in range(5):
+        state = step(state)
+    w1 = np.asarray(state.weights)
+    plast = np.asarray(tables.plastic_out).reshape(-1)
+    frozen = ~plast
+    np.testing.assert_array_equal(w1[:plast.size][frozen],
+                                  w0[:plast.size][frozen])
+    # and the plastic ones really are clipped to the aggressive bound
+    assert w1[:plast.size][plast].max() <= cfg.w_max_factor * cfg.w_ref
+
+
+def test_static_weights_pinned_over_plastic_run(small_connectome):
+    """End-to-end: after a full plastic session run, every non-plastic
+    synapse weight is bitwise-identical to its initial value."""
+    c = small_connectome
+    sim = Simulator(connectome=c, plasticity="pair_stdp",
+                    sim_config=SimConfig(strategy="event", spike_budget=256))
+    tables, ps0 = P.build_plastic_tables(c)
+    sim.run(50.0)
+    plast = np.asarray(tables.plastic_out).reshape(-1)
+    w0 = np.asarray(ps0.weights)
+    w1 = np.asarray(sim.state[1].weights)
+    np.testing.assert_array_equal(w1[:plast.size][~plast],
+                                  w0[:plast.size][~plast])
+    assert not np.array_equal(w1[:plast.size][plast],
+                              w0[:plast.size][plast])
+
+
+# ---------------------------------------------------------------------------
+# Rule registry + protocol
+# ---------------------------------------------------------------------------
+
+def test_registry_and_serialization():
+    assert "pair_stdp" in P.available_rules()
+    rule = P.resolve_rule("pair_stdp")
+    assert isinstance(rule, P.PairSTDP)
+    # dict spec round-trip
+    d = rule.to_dict()
+    assert d["kind"] == "pair_stdp"
+    assert P.PlasticityRule.from_dict(d) == rule
+    assert P.resolve_rule({"kind": "pair_stdp", "A_plus": 0.02}) == \
+        P.PairSTDP(A_plus=0.02)
+    # legacy shims
+    assert P.resolve_rule(True) == P.PairSTDP()
+    assert P.resolve_rule(P.STDPConfig(lr=2.0)).lr == 2.0
+    with pytest.raises(ValueError, match="unknown plasticity rule"):
+        P.resolve_rule("nope")
+    with pytest.raises(ValueError, match="unknown field"):
+        P.PlasticityRule.from_dict({"kind": "pair_stdp", "bogus": 1})
+    with pytest.raises(TypeError, match="plasticity"):
+        P.resolve_rule(3.14)
+
+
+def test_custom_rule_registration(small_connectome):
+    """A user-registered rule composes into the fused scan through the
+    same bound protocol the built-in uses."""
+
+    class _BoundDecay:
+        def __init__(self, c, rate):
+            self.tables, self.state0 = P.build_plastic_tables(c)
+            self.plastic_mask = self.tables.plastic_out.reshape(-1)
+            self.n, self.k_out = c.n_total, c.targets.shape[1]
+            self.rate = rate
+
+        def step(self, state, tables, spiked):
+            flat = tables.plastic_out.reshape(-1)
+            pad = state.weights.shape[0] - flat.shape[0]
+            mask = jnp.concatenate([flat, jnp.zeros((pad,), bool)])
+            w = jnp.where(mask, state.weights * (1.0 - self.rate),
+                          state.weights)
+            return P.PlasticState(w, state.x_pre, state.x_post)
+
+        def weight_view(self, state, tables):
+            return P.plastic_weight_view(state, self.n, self.k_out)
+
+    @P.register("unit_test_decay")
+    @dataclasses.dataclass(frozen=True)
+    class DecayRule(P.PlasticityRule):
+        rate: float = 1e-4
+
+        def bind(self, c, cfg):
+            return _BoundDecay(c, self.rate)
+
+    try:
+        c = small_connectome
+        sim = Simulator(connectome=c, plasticity="unit_test_decay",
+                        probes=("pop_counts", "mean_plastic_weight"),
+                        sim_config=SimConfig(spike_budget=256))
+        res = sim.run(5.0)
+        mw = res["mean_plastic_weight"]
+        # pure exponential decay of every plastic weight
+        np.testing.assert_allclose(mw[-1] / mw[0],
+                                   (1.0 - 1e-4) ** (res.n_steps - 1),
+                                   rtol=1e-5)
+        with pytest.raises(ValueError, match="already registered"):
+            P.register("unit_test_decay")(DecayRule)
+    finally:
+        del P.REGISTRY["unit_test_decay"]
+
+
+def test_dense_strategy_rejects_plasticity(small_connectome):
+    with pytest.raises(ValueError, match="live-weight"):
+        Simulator(connectome=small_connectome, plasticity="pair_stdp",
+                  sim_config=SimConfig(strategy="dense", spike_budget=64))
+
+
+# ---------------------------------------------------------------------------
+# The deprecated front-end is a bitwise shim over the session API
+# ---------------------------------------------------------------------------
+
+def test_simulate_plastic_shim_is_bitwise(small_connectome):
+    """The retired standalone loop and Simulator(plasticity=...) are the
+    same trajectory: pop counts, mean-weight trace and final plastic
+    state all bitwise-equal."""
+    c = small_connectome
+    cfg = SimConfig(strategy="event", spike_budget=256)
+    with pytest.warns(DeprecationWarning, match="simulate_plastic"):
+        sim_f, ps_f, (counts, mean_w) = P.simulate_plastic(
+            c, 20.0, cfg, P.STDPConfig())
+
+    sim = Simulator(connectome=c, plasticity="pair_stdp",
+                    probes=("pop_counts", "mean_plastic_weight"),
+                    sim_config=cfg)
+    res = sim.run(20.0)
+    np.testing.assert_array_equal(np.asarray(counts), res["pop_counts"])
+    np.testing.assert_array_equal(np.asarray(mean_w),
+                                  res["mean_plastic_weight"])
+    for got, want in zip(jax.tree.leaves(sim.state[1]),
+                         jax.tree.leaves(ps_f)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_stdp_kwarg_is_deprecated_alias(small_connectome):
+    c = small_connectome
+    with pytest.warns(DeprecationWarning, match="stdp= argument"):
+        sim_old = Simulator(connectome=c, stdp=True,
+                            sim_config=SimConfig(spike_budget=256))
+    sim_new = Simulator(connectome=c, plasticity="pair_stdp",
+                        sim_config=SimConfig(spike_budget=256))
+    a = sim_old.run(5.0)
+    b = sim_new.run(5.0)
+    np.testing.assert_array_equal(a["pop_counts"], b["pop_counts"])
+
+
+# ---------------------------------------------------------------------------
+# Delivery-strategy-generic live weights + long-horizon session support
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def plastic_cfg():
+    return SimConfig(strategy="event", spike_budget=256)
+
+
+def _plastic_sim(c, cfg, probes=("spikes",)):
+    return Simulator(connectome=c, plasticity="pair_stdp", probes=probes,
+                     sim_config=cfg)
+
+
+def test_event_vs_ell_plastic_equivalence(medium_connectome):
+    """Acceptance: at scale 0.05 the live-weight path is bitwise-identical
+    under the event and sparse-ELL delivery strategies — spike trains and
+    final plastic weights."""
+    c = medium_connectome
+    res, states = {}, {}
+    for strategy in ("event", "ell"):
+        sim = _plastic_sim(c, SimConfig(strategy=strategy, spike_budget=256))
+        res[strategy] = sim.run(20.0)["spikes"]
+        states[strategy] = sim.state[1]
+    np.testing.assert_array_equal(res["event"], res["ell"])
+    for a, b in zip(jax.tree.leaves(states["event"]),
+                    jax.tree.leaves(states["ell"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_plastic_chunked_and_checkpoint_bitwise(medium_connectome, tmp_path,
+                                                plastic_cfg):
+    """Acceptance: a chunked plastic run equals a single-shot run bitwise,
+    and PlasticState (weights + traces) round-trips bitwise through a
+    checkpoint-restore of a chunked session."""
+    c = medium_connectome
+    t_ms = 20.0
+
+    want = _plastic_sim(c, plastic_cfg).run(t_ms)["spikes"]
+
+    sim_c = _plastic_sim(c, plastic_cfg)
+    chunked = sim_c.run_chunked(t_ms, chunk_ms=7.0)["spikes"]   # uneven
+    np.testing.assert_array_equal(want, chunked)
+
+    d = str(tmp_path / "ckpt")
+    first = _plastic_sim(c, plastic_cfg)
+    a = first.run_chunked(t_ms / 2, chunk_ms=5.0,
+                          checkpoint_dir=d)["spikes"]
+    resumed = _plastic_sim(c, plastic_cfg)
+    resumed.restore(d)
+    # the restored plastic state is bitwise the saved one...
+    for got, want_leaf in zip(jax.tree.leaves(resumed.state),
+                              jax.tree.leaves(first.state)):
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(want_leaf))
+    # ...and the resumed trajectory completes the single-shot one
+    b = resumed.run_chunked(t_ms / 2, chunk_ms=5.0)["spikes"]
+    np.testing.assert_array_equal(want, np.concatenate([a, b], axis=0))
+
+
+def test_weight_stats_stream_probe(small_connectome):
+    """weight_stats streams the plastic weight distribution in-scan and
+    threads its carry across chunk boundaries."""
+    c = small_connectome
+    cfg = SimConfig(strategy="event", spike_budget=256)
+    sim = _plastic_sim(c, cfg, probes=("spikes", "weight_stats"))
+    res = sim.run(20.0)
+    ws = res.streams["weight_stats"]["carry"]
+    assert int(ws["steps"]) == res.n_steps
+    assert ws["min"] <= ws["mean"] <= ws["max"]
+    assert np.isfinite(ws["std"]) and ws["std"] >= 0
+
+    # chunking reproduces the identical carry (state + carry both thread)
+    sim2 = _plastic_sim(c, cfg, probes=("spikes", "weight_stats"))
+    res2 = sim2.run_chunked(20.0, chunk_ms=7.0)
+    for k in ws:
+        np.testing.assert_array_equal(ws[k],
+                                      res2.streams["weight_stats"]["carry"][k])
+
+    # mean agrees bitwise with the per-step mean_plastic_weight probe
+    sim3 = _plastic_sim(c, cfg, probes=("mean_plastic_weight",))
+    mw = sim3.run(20.0)["mean_plastic_weight"]
+    np.testing.assert_array_equal(np.float32(ws["mean"]), mw[-1])
+
+
+def test_weight_stats_needs_plasticity_and_fused(small_connectome):
+    c = small_connectome
+    cfg = SimConfig(spike_budget=256)
+    # static run: trace-time error from the probe
+    with pytest.raises(ValueError, match="plasticity-enabled"):
+        Simulator(connectome=c, probes=("weight_stats",),
+                  sim_config=cfg).run(1.0)
+    # spiked-only backends reject the ctx-consuming probe up front
+    with pytest.raises(NotImplementedError, match="weight_stats"):
+        Simulator(connectome=c, backend="instrumented",
+                  probes=("weight_stats",), sim_config=cfg)
