@@ -6,7 +6,7 @@
   phase_breakdown   — paper Fig. 1b bottom (update/deliver fractions)
   delivery_ablation — beyond-paper: event vs dense vs gated-kernel delivery
   roofline          — deliverable (g): per-cell roofline terms from dry-run
-  lm_step_bench     — LM substrate sanity step times (smoke scale)
+  serve_throughput  — session-server load: sessions/sec, p50/p99 latency
 
 Run: PYTHONPATH=src python -m benchmarks.run [name ...]
 """
@@ -17,16 +17,15 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (delivery_ablation, lm_step_bench,
-                            phase_breakdown, roofline, strong_scaling,
-                            table1_rtf)
+    from benchmarks import (delivery_ablation, phase_breakdown, roofline,
+                            serve_throughput, strong_scaling, table1_rtf)
     suites = {
         "table1_rtf": table1_rtf.main,
         "strong_scaling": strong_scaling.main,
         "phase_breakdown": phase_breakdown.main,
         "delivery_ablation": delivery_ablation.main,
         "roofline": roofline.main,
-        "lm_step_bench": lm_step_bench.main,
+        "serve_throughput": lambda: serve_throughput.main([]),
     }
     picked = sys.argv[1:] or list(suites)
     print("name,us_per_call,derived")

@@ -39,6 +39,8 @@ import numpy as np
 
 from repro.api.probes import Probe, ProbeContext, StreamProbe, split_probes
 from repro.core import delivery as dlv
+# stdlib-only module; the rest of repro.serve resolves lazily (no cycle)
+from repro.serve.compile_cache import ExecutableCache
 from repro.core import distributed as DD
 from repro.core import stimulus as stim
 from repro.core.connectivity import Connectome
@@ -135,6 +137,31 @@ class Backend:
     def supports_probe(self, probe: Probe) -> bool:
         return True
 
+    def built_for(self, c: Connectome, cfg: SimConfig) -> bool:
+        """True when ``build(c, cfg)`` would reproduce the current build —
+        the shared-backend fast path: the serve session manager hands one
+        built backend to many ``Simulator`` sessions, and the Simulator
+        skips the rebuild (keeping the compiled executables warm) when
+        this holds."""
+        if getattr(self, "c", None) is not c:
+            return False
+        try:
+            return self.cfg == resolve_sim_config(cfg, c)
+        except Exception:
+            return False
+
+    def _invalidate_on_rebuild(self, c: Connectome, cfg: SimConfig,
+                               *caches) -> None:
+        """Clear compiled-executable caches when ``build`` targets a
+        different network/config than the current one (the cached runners
+        close over the old tables and would silently compute against
+        them)."""
+        if getattr(self, "c", None) is None:
+            return
+        if self.c is not c or self.cfg != cfg:
+            for cache in caches:
+                cache.clear()
+
     def warmup(self, state: Any, n_steps: int,
                probes: Sequence[Probe]) -> None:
         """Compile the ``run`` of this length; must not mutate ``state``.
@@ -174,12 +201,19 @@ class FusedBackend(Backend):
                                  "stdp=, not both")
             plasticity = stdp      # resolve_rule maps STDPConfig / True
         self.plasticity = plasticity
-        self._cache: Dict[Any, Any] = {}
-        self._aot: Dict[Any, Any] = {}
-        self._batch_cache: Dict[Any, Any] = {}
+        # instrumented compile caches (repro.serve.compile_cache): `_cache`
+        # holds jit wrappers (compiled lazily at first call), `_aot` holds
+        # lowered-and-compiled executables (warmup), `_batch_cache` the
+        # vmapped wrappers.  A cache miss is a new program; hit counters
+        # are what the serve subsystem's compile-sharing tests assert.
+        self._cache = ExecutableCache("fused.jit")
+        self._aot = ExecutableCache("fused.aot")
+        self._batch_cache = ExecutableCache("fused.batch")
 
     def build(self, c, cfg, neuron=None):
         cfg = resolve_sim_config(cfg, c)    # auto spike budget, name check
+        self._invalidate_on_rebuild(c, cfg, self._cache, self._aot,
+                                    self._batch_cache)
         self.c, self.cfg = c, cfg
         neuron = neuron or NeuronParams()
         self.prop = Propagators.make(neuron, cfg.dt)
@@ -212,17 +246,19 @@ class FusedBackend(Backend):
     def warmup(self, state, n_steps, probes):
         # AOT lower+compile: no execution, so warming a long scan is cheap
         key = (n_steps, tuple(probes))
-        if key not in self._aot:
+
+        def build():
             fn = self._compiled(*key)
             _, stream_probes = split_probes(key[1])
             carries = self._stream_carries(stream_probes, None)
-            self._aot[key] = fn.lower(*self._args(state), carries).compile()
+            return fn.lower(*self._args(state), carries).compile()
+        self._aot.get_or_build(key, build)
 
     def run(self, state, n_steps, probes, stream=None):
         probes = tuple(probes)
         step_probes, stream_probes = split_probes(probes)
         carries = self._stream_carries(stream_probes, stream)
-        fn = self._aot.get((n_steps, probes)) \
+        fn = self._aot.peek((n_steps, probes)) \
             or self._compiled(n_steps, probes)
         state, carries, outs = fn(*self._args(state), carries)
         data = dict(zip((p.name for p in step_probes), outs))
@@ -238,27 +274,25 @@ class FusedBackend(Backend):
             for p in stream_probes)
 
     def _batched(self, n_steps: int, probes):
-        key = (n_steps, probes)
-        if key not in self._batch_cache:
+        def build():
             runner = self._runner(n_steps, probes)
             n_net_args = 2 if self._bound is not None else 1
             in_axes = (0,) + (None,) * n_net_args + (0,)
-            self._batch_cache[key] = jax.jit(jax.vmap(runner,
-                                                      in_axes=in_axes))
-        return self._batch_cache[key]
+            return jax.jit(jax.vmap(runner, in_axes=in_axes))
+        return self._batch_cache.get_or_build((n_steps, probes), build)
 
     def warmup_batch(self, states, n_steps, probes):
         # AOT lower+compile, like warmup(): no execution, so warming a
         # long multi-trial program costs compile time only
         probes = tuple(probes)
         n_trials = jax.tree.leaves(states)[0].shape[0]
-        key = (n_trials, n_steps, probes)
-        if key not in self._aot:
+
+        def build():
             fn = self._batched(n_steps, probes)
             _, stream_probes = split_probes(probes)
             carries = self._batch_carries(stream_probes, None, n_trials)
-            self._aot[key] = fn.lower(*self._args(states),
-                                      carries).compile()
+            return fn.lower(*self._args(states), carries).compile()
+        self._aot.get_or_build((n_trials, n_steps, probes), build)
 
     def run_batch(self, states, n_steps, probes, stream=None):
         """Vmapped multi-trial execution: one device program, all trials.
@@ -272,7 +306,7 @@ class FusedBackend(Backend):
         step_probes, stream_probes = split_probes(probes)
         n_trials = jax.tree.leaves(states)[0].shape[0]
         carries = self._batch_carries(stream_probes, stream, n_trials)
-        fn = self._aot.get((n_trials, n_steps, probes)) \
+        fn = self._aot.peek((n_trials, n_steps, probes)) \
             or self._batched(n_steps, probes)
         states, carries, outs = fn(*self._args(states), carries)
         data = dict(zip((p.name for p in step_probes), outs))
@@ -280,12 +314,9 @@ class FusedBackend(Backend):
         return states, data, None
 
     def _compiled(self, n_steps: int, probes):
-        key = (n_steps, probes)
-        if key in self._cache:
-            return self._cache[key]
-        fn = jax.jit(self._runner(n_steps, probes))
-        self._cache[key] = fn
-        return fn
+        return self._cache.get_or_build(
+            (n_steps, probes),
+            lambda: jax.jit(self._runner(n_steps, probes)))
 
     def _runner(self, n_steps: int, probes):
         """The raw (unjitted) scan runner — ``run`` jits it as-is,
@@ -357,7 +388,8 @@ class InstrumentedBackend(Backend):
     def __init__(self):
         self.timers: Dict[str, float] = {}
         self._warmed: set = set()
-        self._stream_cache: Dict[Any, Any] = {}
+        self._stream_cache = ExecutableCache("instrumented.stream")
+        self._record_cache = ExecutableCache("instrumented.record")
 
     def supports_probe(self, probe):
         # per-step dispatch feeds stream probes the bare spike vector;
@@ -366,6 +398,10 @@ class InstrumentedBackend(Backend):
 
     def build(self, c, cfg, neuron=None):
         cfg = resolve_sim_config(cfg, c)
+        self._invalidate_on_rebuild(c, cfg, self._stream_cache,
+                                    self._record_cache)
+        if getattr(self, "c", None) is not None:
+            self._warmed.clear()
         self.c, self.cfg = c, cfg
         neuron = neuron or NeuronParams()
         self.prop = Propagators.make(neuron, cfg.dt)
@@ -376,7 +412,6 @@ class InstrumentedBackend(Backend):
             s, self.net, self.prop, cfg, c.w_ext, c.n_total, self.drive))
         self._deliver = jax.jit(lambda s, spk: deliver_phase(
             s, self.net, cfg, spk, c.n_exc))
-        self._record_cache: Dict[Any, Any] = {}
 
     def init(self, key):
         return init_state(self.c, key, self.cfg.state_dtype)
@@ -398,22 +433,22 @@ class InstrumentedBackend(Backend):
         return state, spiked
 
     def _record_fn(self, probes):
-        if probes not in self._record_cache:
+        def build():
             n_pops, net = self.n_pops, self.net
 
             def record(state, spiked):
                 ctx = ProbeContext(state, spiked, net, n_pops)
                 return tuple(p(ctx) for p in probes)
-            self._record_cache[probes] = jax.jit(record)
-        return self._record_cache[probes]
+            return jax.jit(record)
+        return self._record_cache.get_or_build(probes, build)
 
     def _stream_fn(self, stream_probes):
-        if stream_probes not in self._stream_cache:
+        def build():
             def upd(carries, spiked):
                 return tuple(p.update(c, spiked)
                              for p, c in zip(stream_probes, carries))
-            self._stream_cache[stream_probes] = jax.jit(upd)
-        return self._stream_cache[stream_probes]
+            return jax.jit(upd)
+        return self._stream_cache.get_or_build(stream_probes, build)
 
     def warmup(self, state, n_steps, probes):
         # per-step dispatch: compiling the per-phase jits once is enough
@@ -484,11 +519,12 @@ class ShardedBackend(Backend):
 
     def __init__(self, n_devices: Optional[int] = None):
         self.n_devices = n_devices
-        self._cache: Dict[int, Any] = {}
-        self._aot: Dict[int, Any] = {}
+        self._cache = ExecutableCache("sharded.jit")
+        self._aot = ExecutableCache("sharded.aot")
 
     def build(self, c, cfg, neuron=None):
         cfg = resolve_sim_config(cfg, c)
+        self._invalidate_on_rebuild(c, cfg, self._cache, self._aot)
         strategy = dlv.get_strategy(cfg.strategy)
         if not strategy.supports_sharding:
             raise ValueError(
@@ -530,13 +566,14 @@ class ShardedBackend(Backend):
 
     def warmup(self, state, n_steps, probes):
         _, stream_probes = split_probes(tuple(probes))
-        key = (n_steps, stream_probes)
-        if key not in self._aot:
+
+        def build():
             fn = self._compiled(n_steps, stream_probes)
             carries = self._stream_carries(stream_probes, None)
             with self.mesh:
-                self._aot[key] = fn.lower(state, self.tables, carries,
-                                          self._drive_bases).compile()
+                return fn.lower(state, self.tables, carries,
+                                self._drive_bases).compile()
+        self._aot.get_or_build((n_steps, stream_probes), build)
 
     def init(self, key):
         c, meta, n_dev = self.c, self.meta, self.n_dev
@@ -568,7 +605,7 @@ class ShardedBackend(Backend):
                     f"and StreamProbes only, got probe {p.name!r}")
         step_probes, stream_probes = split_probes(probes)
         carries = self._stream_carries(stream_probes, stream)
-        fn = self._aot.get((n_steps, stream_probes)) \
+        fn = self._aot.peek((n_steps, stream_probes)) \
             or self._compiled(n_steps, stream_probes)
         with self.mesh:
             state, pop_counts, carries = fn(state, self.tables, carries,
@@ -583,8 +620,7 @@ class ShardedBackend(Backend):
         return state, data
 
     def _compiled(self, n_steps: int, stream_probes=()):
-        key = (n_steps, stream_probes)
-        if key not in self._cache:
+        def build():
             c, cfg = self.c, self.cfg
             sim = DD.make_sharded_step(
                 self.mesh, self.meta, self.prop, n_exc=c.n_exc,
@@ -592,8 +628,8 @@ class ShardedBackend(Backend):
                 spike_budget=cfg.spike_budget, n_steps=n_steps,
                 pop_of=self.pop_of, n_pops=self.n_pops,
                 stream_probes=stream_probes)
-            self._cache[key] = jax.jit(sim)
-        return self._cache[key]
+            return jax.jit(sim)
+        return self._cache.get_or_build((n_steps, stream_probes), build)
 
 
 REGISTRY = {

@@ -163,7 +163,8 @@ class Experiment:
 
     # -- execution ----------------------------------------------------------
 
-    def make_simulator(self, connectome=None, **sim_kwargs):
+    def make_simulator(self, connectome=None, *, backend=None,
+                       **sim_kwargs):
         """Build the :class:`Simulator` session this experiment declares
         (model + stimulus + probes, with the streaming ``spike_stats``
         validation probe appended when ``validate`` is set).
@@ -171,7 +172,11 @@ class Experiment:
         ``run`` uses this internally; callers needing session-level
         control (``run_chunked``, checkpointing) drive the returned
         simulator directly — ``examples/microcircuit_sim.py --chunk``
-        does exactly that.
+        does exactly that.  ``backend`` overrides the experiment's
+        backend *name* with a concrete :class:`~repro.api.backends.
+        Backend` instance — the serve session manager passes an
+        already-built shared backend here so same-config sessions pay
+        for compilation once.
         """
         from repro import validate as V
         from repro.api.probes import spike_stats
@@ -191,10 +196,19 @@ class Experiment:
                                seed=int(model.seed))
             probes.append(
                 spike_stats(ids, bin_steps=max(1, round(2.0 / model.dt))))
+        if backend is None:
+            backend = self.backend
+            plasticity = self.plasticity
+        else:
+            # a Backend instance carries its own plasticity binding;
+            # passing the rule again would double-resolve (make_backend
+            # rejects instance+plasticity unless the instance has it)
+            plasticity = self.plasticity if getattr(
+                backend, "plasticity", None) is not None else None
         return Simulator(model, connectome=connectome,
-                         backend=self.backend, probes=probes,
+                         backend=backend, probes=probes,
                          stimulus=self.stimulus or None,
-                         plasticity=self.plasticity, **sim_kwargs)
+                         plasticity=plasticity, **sim_kwargs)
 
     def run(self, *, connectome=None, warmup: bool = False,
             **sim_kwargs) -> "ExperimentResult":

@@ -163,15 +163,24 @@ def spike_stats(ids, bin_steps: int = 20,
     bin_steps = int(bin_steps)
     if bin_steps < 1:
         raise ValueError(f"bin_steps must be >= 1, got {bin_steps}")
+    # intern on content: StreamProbe equality is identity, and backend
+    # executable caches key on probe instances — two sessions sampling
+    # the same ids must share one probe or every session recompiles
+    key = (name, bin_steps, ids.tobytes())
+    cached = _STREAM_INTERNED.get(key)
+    if cached is not None:
+        return cached
     dev_ids = jnp.asarray(ids)
 
     def update(carry, spiked):
         return VS.update_carry(carry, spiked[dev_ids], bin_steps=bin_steps)
 
-    return StreamProbe(name=name,
-                       init=lambda: VS.init_carry(ids.size),
-                       update=update,
-                       meta={"ids": ids, "bin_steps": bin_steps})
+    probe = StreamProbe(name=name,
+                        init=lambda: VS.init_carry(ids.size),
+                        update=update,
+                        meta={"ids": ids, "bin_steps": bin_steps})
+    _STREAM_INTERNED[key] = probe
+    return probe
 
 
 def weight_stats(name: str = "weight_stats") -> StreamProbe:
@@ -234,6 +243,10 @@ ProbeLike = Union[str, Probe, "StreamProbe"]
 # caches are keyed on Probe instances — resolving the same name twice must
 # yield the SAME object or every run would recompile.
 _INTERNED: dict = {}
+
+# content-key -> StreamProbe, for parameterised stream-probe factories
+# (spike_stats): same sample + bin width -> same instance across sessions
+_STREAM_INTERNED: dict = {}
 
 
 def resolve(probes: Sequence[ProbeLike]) -> tuple:

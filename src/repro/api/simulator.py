@@ -134,7 +134,13 @@ class Simulator:
         self.plasticity = plasticity
         self.backend: Backend = make_backend(backend, plasticity=plasticity,
                                              n_devices=n_devices)
-        self.backend.build(connectome, sim_config, neuron)
+        if neuron is not None \
+                or not self.backend.built_for(connectome, sim_config):
+            self.backend.build(connectome, sim_config, neuron)
+        # else: shared-backend fast path — the serve session manager hands
+        # one built backend to many sessions; its network tables and
+        # compiled executables are reused untouched (Backend.run is pure
+        # in the state, so sessions never interfere)
         # backends resolve the config (auto spike budget etc.); expose it
         self.sim_config = getattr(self.backend, "cfg", sim_config)
 
@@ -169,6 +175,18 @@ class Simulator:
         return self._state
 
     @property
+    def suspended(self) -> bool:
+        """True while the device state is released (see :meth:`suspend`)."""
+        return self._state is None
+
+    def _require_state(self, what: str) -> None:
+        if self._state is None:
+            raise RuntimeError(
+                f"cannot {what}: this session is suspended (its device "
+                f"state was released by suspend()); call resume(directory)"
+                f" first")
+
+    @property
     def timers(self):
         """Per-phase cumulative seconds (instrumented backend only)."""
         return getattr(self.backend, "timers", {})
@@ -183,6 +201,7 @@ class Simulator:
         """Compile (and discard) a run of ``t_ms`` so a following ``run``
         of the same length measures execution only. Pure: session state is
         untouched."""
+        self._require_state("warmup")
         pr = self.probes if probes is None else probes_mod.resolve(probes)
         self.backend.warmup(self._state, self._steps(t_ms), pr)
         if include_presim and self.t_presim > 0 and not self._presim_done:
@@ -207,6 +226,7 @@ class Simulator:
         untimed and unrecorded once per session before the first timed
         phase, as in the paper's measurement protocol.
         """
+        self._require_state("run")
         pr = self.probes if probes is None else probes_mod.resolve(probes)
         _, stream_probes = probes_mod.split_probes(pr)
         self._maybe_presim(presim_ms)
@@ -412,31 +432,51 @@ class Simulator:
 
     def save(self, directory: str, keep: int = 3) -> str:
         """Persist the session (state + counters) for ``restore``."""
+        self._require_state("save")
         from repro.checkpoint import checkpointer
         return checkpointer.save(self._package(), directory,
                                  step=self._steps_done, keep=keep)
+
+    def suspend(self, directory: str, keep: int = 3) -> str:
+        """Checkpoint the session, then release its device state.
+
+        The serve subsystem's idle-session hook: a suspended session
+        costs no device memory (the state pytree — neuron state, ring
+        buffer, plastic weights — is dropped after the save), while the
+        backend's compiled executables stay warm for the sessions still
+        running.  ``resume`` reverses it exactly (bitwise: the restored
+        run continues as if never suspended).  Returns the checkpoint
+        path."""
+        path = self.save(directory, keep=keep)
+        self._state = None
+        return path
+
+    def resume(self, directory: str, step: Optional[int] = None) -> None:
+        """Undo :meth:`suspend`: re-materialise the device state from the
+        checkpoint.  Also valid on a non-suspended session (then equal to
+        :meth:`restore`)."""
+        if self._state is None:
+            # restore() needs a target structure; a fresh init provides
+            # the shapes/dtypes and is immediately overwritten
+            self._state = self.backend.init(self._key)
+        self.restore(directory, step=step)
 
     def restore(self, directory: str, step: Optional[int] = None) -> None:
         """Resume a saved session: state, presim flag, and step counters.
 
         The target structure comes from this Simulator, so config/backend
-        must match what was saved (shape mismatches fail loudly).
+        must match what was saved — a version, structure or shape
+        mismatch raises :class:`repro.checkpoint.checkpointer.
+        CheckpointMismatchError` naming the offending leaf.
 
         Stream-probe statistics are NOT part of the checkpoint (their
         carry set depends on the probes of the restoring session, not the
         saving one): the accumulators restart empty at the restore point,
         so streamed statistics cover the post-restore window only —
         never a stale or double-counted one."""
+        self._require_state("restore (use resume() on a suspended session)")
         from repro.checkpoint import checkpointer
         pkg = checkpointer.restore(directory, self._package(), step=step)
-        for got, want in zip(jax.tree.leaves(pkg["state"]),
-                             jax.tree.leaves(self._state)):
-            if np.shape(got) != np.shape(want):
-                raise ValueError(
-                    f"checkpoint in {directory} does not match this "
-                    f"session (leaf shape {np.shape(got)} vs "
-                    f"{np.shape(want)}); config/backend must equal the "
-                    f"saving session's")
         self._state = pkg["state"]
         self._presim_done = bool(int(pkg["presim_done"]))
         self._steps_done = int(pkg["steps_done"])

@@ -1,11 +1,17 @@
 """Sharded checkpointing: save/restore, async save, reshard-on-load.
 
 Format: one ``.npz`` per host (this container: one) + a JSON manifest with
-the tree structure, shapes, dtypes and step.  Restore is mesh-agnostic —
-arrays are ``device_put`` against whatever shardings the *restoring* job
-resolves, so a job may restart on a different device count (elastic
-restart).  Saves run on a background thread off the training critical path;
-``keep`` bounds retained checkpoints.
+the schema version, tree structure, shapes, dtypes and step.  Restore is
+mesh-agnostic — arrays are ``device_put`` against whatever shardings the
+*restoring* job resolves, so a job may restart on a different device count
+(elastic restart).  Saves run on a background thread off the training
+critical path; ``keep`` bounds retained checkpoints.
+
+Payloads are validated *before* any array is unflattened: a manifest with
+an unknown schema version, a leaf-set mismatch (missing/extra keys) or a
+per-leaf shape mismatch raises :class:`CheckpointMismatchError` naming the
+offending leaves — the serve subsystem's suspend/resume leans on restore
+failing with an actionable message instead of a raw numpy shape error.
 """
 from __future__ import annotations
 
@@ -21,6 +27,16 @@ import numpy as np
 
 _SEP = "||"
 
+CKPT_SCHEMA = "repro.checkpoint/v1"
+# manifests written before the schema field existed carry no "schema" key;
+# they validate structurally like v1 (the payload format is unchanged)
+_ACCEPTED_SCHEMAS = (None, CKPT_SCHEMA)
+
+
+class CheckpointMismatchError(ValueError):
+    """A checkpoint cannot be restored into the requested target: schema
+    version unknown, leaf set differs, or a leaf's shape differs."""
+
 
 def _flatten(tree: Any):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
@@ -31,14 +47,15 @@ def _flatten(tree: Any):
     return out, treedef
 
 
-def save(state: Any, directory: str, step: int, keep: int = 3) -> str:
-    """Blocking save. Returns the checkpoint path."""
+def _write_checkpoint(directory: str, arrays: dict, step: int,
+                      keep: int) -> str:
+    """Write arrays + schema-versioned manifest, publish atomically."""
     path = os.path.join(directory, f"step_{step:08d}")
     tmp = path + ".tmp"
     os.makedirs(tmp, exist_ok=True)
-    arrays, _ = _flatten(state)
     np.savez(os.path.join(tmp, "host_0.npz"), **arrays)
     manifest = {
+        "schema": CKPT_SCHEMA,
         "step": int(step),
         "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
                    for k, v in arrays.items()},
@@ -50,6 +67,12 @@ def save(state: Any, directory: str, step: int, keep: int = 3) -> str:
     os.rename(tmp, path)           # atomic publish
     _gc(directory, keep)
     return path
+
+
+def save(state: Any, directory: str, step: int, keep: int = 3) -> str:
+    """Blocking save. Returns the checkpoint path."""
+    arrays, _ = _flatten(state)
+    return _write_checkpoint(directory, arrays, step, keep)
 
 
 class AsyncCheckpointer:
@@ -69,20 +92,7 @@ class AsyncCheckpointer:
         self._thread.start()
 
     def _write(self, arrays, step):
-        path = os.path.join(self.directory, f"step_{step:08d}")
-        tmp = path + ".tmp"
-        os.makedirs(tmp, exist_ok=True)
-        np.savez(os.path.join(tmp, "host_0.npz"), **arrays)
-        manifest = {"step": int(step),
-                    "leaves": {k: {"shape": list(v.shape),
-                                   "dtype": str(v.dtype)}
-                               for k, v in arrays.items()}}
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
-        if os.path.exists(path):
-            shutil.rmtree(path)
-        os.rename(tmp, path)
-        _gc(self.directory, self.keep)
+        _write_checkpoint(self.directory, arrays, step, self.keep)
 
     def wait(self):
         if self._thread is not None:
@@ -98,19 +108,61 @@ def latest_step(directory: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def _validate_manifest(path: str, target_leaves: dict) -> None:
+    """Check schema + leaf set + shapes against the manifest, raising a
+    :class:`CheckpointMismatchError` that names the problem (instead of
+    the raw ``KeyError`` / numpy broadcast error a blind load gives)."""
+    manifest_path = os.path.join(path, "manifest.json")
+    if not os.path.exists(manifest_path):     # pre-manifest layouts: defer
+        return                                # to the array-load errors
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    schema = manifest.get("schema")
+    if schema not in _ACCEPTED_SCHEMAS:
+        raise CheckpointMismatchError(
+            f"{path}: unknown checkpoint schema {schema!r} (this build "
+            f"reads {CKPT_SCHEMA!r}); the checkpoint was written by an "
+            f"incompatible version — re-save it, or restore with the "
+            f"version that wrote it")
+    stored = manifest.get("leaves", {})
+    missing = sorted(set(target_leaves) - set(stored))
+    extra = sorted(set(stored) - set(target_leaves))
+    if missing or extra:
+        raise CheckpointMismatchError(
+            f"{path}: checkpoint structure does not match the restoring "
+            f"session (leaves missing from checkpoint: {missing or 'none'}"
+            f"; leaves only in checkpoint: {extra or 'none'}); "
+            f"config/backend must equal the saving session's")
+    for key, want_shape in target_leaves.items():
+        got = tuple(stored[key]["shape"])
+        if got != tuple(want_shape):
+            raise CheckpointMismatchError(
+                f"{path}: leaf {key!r} has shape {got} in the checkpoint "
+                f"but {tuple(want_shape)} in the restoring session — "
+                f"config/backend (network scale, strategy, plasticity) "
+                f"must equal the saving session's")
+
+
 def restore(directory: str, target: Any, step: Optional[int] = None,
             shardings: Any = None) -> Any:
     """Restore into the structure of ``target`` (values ignored).
 
     ``shardings``: optional pytree of NamedShardings (same structure) —
     arrays are placed onto them, which is how elastic restarts reshard.
+
+    Raises :class:`CheckpointMismatchError` when the checkpoint's schema
+    version or leaf structure/shapes do not match ``target``.
     """
     step = latest_step(directory) if step is None else step
     if step is None:
         raise FileNotFoundError(f"no checkpoint in {directory}")
     path = os.path.join(directory, f"step_{step:08d}")
-    data = np.load(os.path.join(path, "host_0.npz"))
     flat, treedef = jax.tree_util.tree_flatten_with_path(target)
+    target_leaves = {
+        _SEP.join(str(p) for p in kpath): np.shape(leaf)
+        for kpath, leaf in flat}
+    _validate_manifest(path, target_leaves)
+    data = np.load(os.path.join(path, "host_0.npz"))
     out = []
     for kpath, leaf in flat:
         key = _SEP.join(str(p) for p in kpath)

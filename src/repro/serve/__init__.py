@@ -1,0 +1,48 @@
+"""Simulation-as-a-service: concurrent sessions over shared executables.
+
+The serve subsystem turns the one-shot ``Simulator`` into a long-lived
+service, the deployment shape the paper motivates with robotics and
+closed-loop workloads:
+
+* :mod:`repro.serve.compile_cache` — the process-wide instrumented
+  compile-cache registry (hit/miss/eviction counters; the engine
+  backends' promoted ``_cache``/``_aot`` dicts live on it),
+* :mod:`repro.serve.session` — ``SessionManager`` / ``Session``:
+  create / run / suspend / resume / destroy, with same-config sessions
+  sharing one built backend (one compilation) and suspended sessions
+  parked on checkpoints (no device memory),
+* :mod:`repro.serve.batching` — coalesces same-config run requests
+  through the vmapped ``run_batch`` path (bitwise-equal to sequential),
+* :mod:`repro.serve.http` — a dependency-free stdlib HTTP/JSON front
+  end streaming per-chunk snapshots (``python -m repro.serve``).
+
+Import note: ``repro.api.backends`` imports ``compile_cache`` from this
+package, so everything else here resolves lazily (PEP 562) to keep the
+package import-light and cycle-free.
+"""
+from __future__ import annotations
+
+from repro.serve.compile_cache import (ExecutableCache, cache_stats,
+                                       fingerprint, reset_cache_counters)
+
+__all__ = [
+    "ExecutableCache", "cache_stats", "fingerprint", "reset_cache_counters",
+    "Session", "SessionManager", "BackendPool",
+    "run_coalesced", "SimServer", "ServeClient",
+]
+
+_LAZY = {
+    "Session": "repro.serve.session",
+    "SessionManager": "repro.serve.session",
+    "BackendPool": "repro.serve.session",
+    "run_coalesced": "repro.serve.batching",
+    "SimServer": "repro.serve.http",
+    "ServeClient": "repro.serve.http",
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,128 @@
+"""Request batching: coalesce same-config sessions into one device program.
+
+Sessions created from the same scenario share a built backend (see
+:class:`repro.serve.session.BackendPool`); when several of them have a
+run request pending for the same horizon, executing them one-by-one
+leaves the device underutilised — each session is one small program.
+:func:`run_coalesced` groups requests by ``(backend instance, n_steps,
+probe set)`` and drives each group through the backend's ``run_batch``
+path, which on the fused backend is a single vmapped program over shared
+network tables (in_axes ``None``) — the same machinery, and the same
+bitwise guarantee, as multi-trial experiments: coalesced results are
+bit-identical to running each session sequentially (pinned by
+``tests/test_serve.py``).
+
+Sessions keep full independence: per-session state, stream-probe
+carries, RTF accounting and overflow surfacing all thread through the
+batch exactly as they would through ``Simulator.run``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _group_key(session):
+    sim = session.sim
+    # probes are interned per name (api.probes.resolve), so equal probe
+    # sets are the same instances and hash/compare by identity
+    return (id(sim.backend), sim.probes)
+
+
+def run_coalesced(requests: Sequence[Tuple[object, float]],
+                  coalesce: bool = True) -> Dict[str, object]:
+    """Execute ``[(session, t_ms), ...]``; returns ``{session.id: RunResult}``.
+
+    Groups of >= 2 sessions sharing (backend, probes, n_steps) run as one
+    ``run_batch`` program; singletons and heterogeneous requests fall back
+    to plain per-session ``run``.  ``coalesce=False`` forces the
+    sequential path (the benchmark's baseline arm).
+    """
+    results: Dict[str, object] = {}
+    groups: Dict[tuple, List[Tuple[object, float]]] = {}
+    for session, t_ms in requests:
+        if session.status != "running":
+            raise RuntimeError(
+                f"session {session.id!r} is {session.status}; only "
+                f"running sessions can be batched")
+        n_steps = session.sim._steps(t_ms)
+        key = _group_key(session) + (n_steps,) if coalesce else \
+            ("seq", session.id)
+        groups.setdefault(key, []).append((session, t_ms))
+
+    for members in groups.values():
+        if len(members) < 2:
+            for session, t_ms in members:
+                results[session.id] = session.run(t_ms)
+        else:
+            results.update(_run_group(members))
+    return results
+
+
+def _run_group(members: List[Tuple[object, float]]) -> Dict[str, object]:
+    """One vmapped ``run_batch`` over the group's stacked session states."""
+    from repro.api.probes import split_probes
+    from repro.api.results import RunResult
+
+    sims = [s.sim for s, _ in members]
+    sim0 = sims[0]
+    backend, probes = sim0.backend, sim0.probes
+    n_steps = sim0._steps(members[0][1])
+    step_probes, stream_probes = split_probes(probes)
+
+    # presim transients run per session (sessions may be mid-horizon and
+    # differ on the flag; a fresh session pays it here, once, like in run)
+    for sim in sims:
+        sim._maybe_presim(None)
+
+    states = jax.tree.map(lambda *xs: jnp.stack(xs),
+                          *[sim._state for sim in sims])
+    stream = {
+        p.name: jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[sim._stream_state.get(p.name) if
+              sim._stream_state.get(p.name) is not None else p.init()
+              for sim in sims])
+        for p in stream_probes}
+
+    t0 = time.perf_counter()
+    states, data, _ = backend.run_batch(states, n_steps, probes,
+                                        stream=stream or None)
+    jax.block_until_ready((states, data))
+    wall = time.perf_counter() - t0
+
+    results: Dict[str, object] = {}
+    for i, (session, _) in enumerate(members):
+        sim = session.sim
+        sim._state = jax.tree.map(lambda x: x[i], states)
+        data_i = {p.name: np.asarray(data[p.name][i])
+                  for p in step_probes}
+        streams_i = {}
+        for p in stream_probes:
+            carry = jax.tree.map(lambda x: x[i], data[p.name])
+            sim._stream_state[p.name] = carry
+            streams_i[p.name] = {"carry": jax.tree.map(np.asarray, carry),
+                                 "meta": dict(p.meta)}
+        sim._steps_done += n_steps
+        sim._t_model_ms += n_steps * sim.sim_config.dt
+        # same surfacing contract as Simulator.run: warn, or raise under
+        # strict_delivery, on any new dropped-spike count
+        overflow = sim._check_overflow()
+        res = RunResult(
+            data=data_i, t_model_ms=n_steps * sim.sim_config.dt,
+            n_steps=n_steps, dt=sim.sim_config.dt,
+            # the group ran concurrently: per-session wall is the
+            # throughput share, as in BatchResult's vmapped semantics
+            wall_s=wall / len(members),
+            overflow=overflow, streams=streams_i,
+            _connectome=sim.connectome)
+        session.t_model_ms += res.t_model_ms
+        session.n_runs += 1
+        results[session.id] = res
+    return results
+
+

@@ -1,0 +1,240 @@
+"""The process-wide, instrumented compile-cache registry.
+
+Compiled executables are the expensive shared resource of a simulation
+service: every distinct ``(program kind, n_steps, probe set)`` against a
+built backend costs an XLA trace+compile, and a server multiplexing many
+sessions over the same connectome must pay each compile exactly once.
+This module provides the primitive the whole story hangs on:
+
+:class:`ExecutableCache`
+    A thread-safe, optionally LRU-bounded mapping with hit / miss /
+    eviction counters.  The engine backends in ``repro.api.backends``
+    promote their private ``_cache`` / ``_aot`` / ``_batch_cache`` dicts
+    to instances of this class, and ``repro.serve.session.BackendPool``
+    uses one to share *built backends* (connectome tables + compiled
+    executables) across sessions.
+
+:func:`cache_stats`
+    Aggregated counters over every live cache in the process — the
+    ``GET /stats`` payload of the HTTP front end, and what the
+    compile-sharing tests assert against ("same scenario twice -> zero
+    new compiles").
+
+The cache key structure is two-level by design: a backend is keyed on
+what affects ``build`` (connectome fingerprint, strategy, stimulus,
+plasticity, backend name — see :func:`fingerprint`), and each backend's
+executables are keyed on what affects tracing (program kind, ``n_steps``,
+probe set, trial count).  The flat view in :func:`cache_stats` exposes
+both levels.
+
+This module is deliberately stdlib-only: ``repro.api`` imports it, so it
+must not import ``repro`` anything (``repro/serve/__init__`` stays lazy
+for the same reason).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import threading
+import weakref
+from collections import OrderedDict
+from typing import Any, Callable, Dict, List, Optional
+
+# every live ExecutableCache, for cache_stats(); weak so a dropped backend
+# (e.g. an evicted BackendPool entry) takes its counters with it
+_CACHES: "weakref.WeakSet[ExecutableCache]" = weakref.WeakSet()
+_LOCK = threading.Lock()
+
+
+class ExecutableCache:
+    """A named, counted, thread-safe cache of expensive build artifacts.
+
+    ``get_or_build(key, builder)`` is the only way entries are created,
+    so ``misses`` equals the number of builder invocations — for the
+    backend executable caches that is the number of XLA compilations,
+    which is what the serve acceptance test pins.  ``peek`` looks up
+    without building (counts a hit when found, nothing when absent): the
+    backends use it for the "AOT if warmed, jit otherwise" fall-through.
+
+    ``capacity=None`` means unbounded (the per-backend caches: a backend
+    holds a handful of programs); a bounded cache evicts least-recently-
+    used entries and counts ``evictions`` (the BackendPool bounds device
+    memory this way).
+    """
+
+    def __init__(self, name: str, capacity: Optional[int] = None):
+        if capacity is not None and capacity < 1:
+            raise ValueError(f"capacity must be >= 1 or None, got {capacity}")
+        self.name = name
+        self.capacity = capacity
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self._entries: "OrderedDict[Any, Any]" = OrderedDict()
+        self._lock = threading.RLock()
+        self._evict_hooks: List[Callable[[Any, Any], None]] = []
+        with _LOCK:
+            _CACHES.add(self)
+
+    # -- the one creation path ---------------------------------------------
+
+    def get_or_build(self, key, builder: Callable[[], Any]):
+        """Return the cached value for ``key``, building (and counting a
+        miss) at most once per key.  The builder runs under the cache
+        lock: concurrent requests for the same key never compile twice."""
+        with self._lock:
+            if key in self._entries:
+                self.hits += 1
+                self._entries.move_to_end(key)
+                return self._entries[key]
+            self.misses += 1
+            value = builder()
+            self._entries[key] = value
+            self._maybe_evict()
+            return value
+
+    def peek(self, key, default=None):
+        """Lookup without building: a found entry counts a hit, a missing
+        one counts nothing (callers fall through to another path)."""
+        with self._lock:
+            if key in self._entries:
+                self.hits += 1
+                self._entries.move_to_end(key)
+                return self._entries[key]
+            return default
+
+    # -- mapping conveniences (no counter side effects) ---------------------
+
+    def __contains__(self, key) -> bool:
+        with self._lock:
+            return key in self._entries
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def keys(self):
+        with self._lock:
+            return list(self._entries.keys())
+
+    def clear(self) -> None:
+        """Drop every entry (counters are kept: they are history)."""
+        with self._lock:
+            for key in list(self._entries):
+                self._evict(key)
+
+    def on_evict(self, hook: Callable[[Any, Any], None]) -> None:
+        """Register ``hook(key, value)`` to run when an entry is evicted
+        (LRU or ``clear``) — the BackendPool suspends evicted sessions'
+        backends this way."""
+        self._evict_hooks.append(hook)
+
+    def _maybe_evict(self) -> None:
+        if self.capacity is None:
+            return
+        while len(self._entries) > self.capacity:
+            self._evict(next(iter(self._entries)))
+
+    def _evict(self, key) -> None:
+        value = self._entries.pop(key)
+        self.evictions += 1
+        for hook in self._evict_hooks:
+            hook(key, value)
+
+    # -- introspection ------------------------------------------------------
+
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            return {
+                "name": self.name,
+                "entries": len(self._entries),
+                "capacity": self.capacity,
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+            }
+
+    def entry_keys(self) -> List[str]:
+        """Human-readable entry keys (for the flat /stats view)."""
+        with self._lock:
+            return [_describe_key(k) for k in self._entries]
+
+    def __repr__(self) -> str:
+        s = self.stats()
+        return (f"ExecutableCache({self.name!r}, entries={s['entries']}, "
+                f"hits={s['hits']}, misses={s['misses']}, "
+                f"evictions={s['evictions']})")
+
+
+def _describe_key(key) -> str:
+    """Render a cache key compactly; probe instances show their names."""
+    if isinstance(key, tuple):
+        return "(" + ", ".join(_describe_key(k) for k in key) + ")"
+    name = getattr(key, "name", None)
+    if name is not None and not isinstance(key, (str, bytes)):
+        return str(name)
+    return repr(key)
+
+
+# ---------------------------------------------------------------------------
+# Process-wide aggregation
+# ---------------------------------------------------------------------------
+
+def iter_caches() -> List[ExecutableCache]:
+    with _LOCK:
+        return sorted(_CACHES, key=lambda c: c.name)
+
+
+def cache_stats(include_keys: bool = False) -> Dict[str, Any]:
+    """Aggregate counters across every live cache in the process.
+
+    ``totals.misses`` over the backend executable caches is the total
+    compile count — the number the serve tests and the ``/stats``
+    endpoint report as ``compiles``.
+    """
+    caches = []
+    totals = {"entries": 0, "hits": 0, "misses": 0, "evictions": 0}
+    for c in iter_caches():
+        s = c.stats()
+        if include_keys:
+            s["keys"] = c.entry_keys()
+        caches.append(s)
+        for k in totals:
+            totals[k] += s[k]
+    return {"caches": caches, "totals": totals,
+            "compiles": totals["misses"]}
+
+
+def reset_cache_counters() -> None:
+    """Zero every cache's counters (entries are kept) — test isolation."""
+    for c in iter_caches():
+        with c._lock:
+            c.hits = c.misses = c.evictions = 0
+
+
+# ---------------------------------------------------------------------------
+# Config fingerprinting
+# ---------------------------------------------------------------------------
+
+def fingerprint(obj: Any) -> str:
+    """Stable hex digest of a JSON-able config structure.
+
+    Keys backend sharing: two sessions whose build-relevant spec
+    (model + stimulus + plasticity + backend) canonicalises to the same
+    JSON share one built backend and therefore one set of compiled
+    executables.  Non-JSON-able specs raise ``TypeError`` — callers fall
+    back to a private (unshared) backend.
+    """
+    blob = json.dumps(obj, sort_keys=True, separators=(",", ":"),
+                      default=_json_default)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def _json_default(o):
+    # numpy scalars/arrays appear in config dicts (e.g. seeds); normalise
+    # the common ones, refuse the rest loudly
+    if hasattr(o, "item") and not hasattr(o, "__len__"):
+        return o.item()
+    if hasattr(o, "tolist"):
+        return o.tolist()
+    raise TypeError(f"not fingerprintable: {type(o).__name__}")

@@ -1,0 +1,342 @@
+"""Sessions over shared backends: the in-process simulation service.
+
+A :class:`SessionManager` multiplexes many concurrent :class:`Session`\\ s
+— each a live :class:`~repro.api.simulator.Simulator` with its own
+dynamical state, seed and stream-probe accumulators — over a bounded pool
+of *shared built backends*.  Two sessions created from the same scenario
+resolve to the same :class:`BackendPool` entry: one connectome
+instantiation, one set of device tables, one compilation per distinct
+program (asserted by ``tests/test_serve.py`` via the
+:mod:`~repro.serve.compile_cache` counters).
+
+Lifecycle::
+
+    mgr = SessionManager()
+    s1 = mgr.create("examples/scenarios/smoke_background.json")
+    s2 = mgr.create("examples/scenarios/smoke_background.json", seed=1)
+    r = s1.run(200.0)                  # -> RunResult (compile shared)
+    mgr.run_many({s1.id: 200.0, s2.id: 200.0})   # coalesced, vmapped
+    s1.suspend()                       # checkpoint + free device state
+    s1.resume()                        # bitwise continuation
+    mgr.destroy(s1.id)
+
+Suspension is backed by ``repro.checkpoint.checkpointer`` (schema-
+versioned payloads): a suspended plastic session parks its weights and
+traces on disk and costs no device memory until resumed.
+"""
+from __future__ import annotations
+
+import itertools
+import os
+import shutil
+import tempfile
+import threading
+import time
+from typing import Any, Dict, List, Optional, Union
+
+from repro.serve.compile_cache import ExecutableCache, cache_stats, \
+    fingerprint
+
+
+def _experiment_from(spec):
+    """Resolve a session spec: Experiment | scenario dict | JSON path."""
+    from repro.api.experiment import Experiment
+    if isinstance(spec, Experiment):
+        return spec
+    if isinstance(spec, dict):
+        return Experiment.from_dict(spec)
+    if isinstance(spec, (str, os.PathLike)):
+        return Experiment.from_json(os.fspath(spec))
+    raise TypeError(f"session spec must be an Experiment, a scenario "
+                    f"dict or a JSON path, got {type(spec)}")
+
+
+def build_key(exp) -> str:
+    """The backend-sharing fingerprint of an experiment.
+
+    Covers exactly what affects ``Backend.build``: the model (which
+    determines the connectome and the resolved ``SimConfig``), the
+    stimulus timeline, the plasticity rule and the backend name.  Probes,
+    duration and trial count are *not* included — they key the per-
+    program executable caches inside the shared backend instead (the
+    two-level scheme described in :mod:`repro.serve.compile_cache`).
+    """
+    import dataclasses
+    d = {
+        "model": dataclasses.asdict(exp.model),
+        "stimulus": [s.to_dict() for s in exp.stimulus],
+        "plasticity": (None if exp.plasticity is None
+                       else exp.plasticity.to_dict()),
+        "backend": exp.backend,
+    }
+    return fingerprint(d)
+
+
+class BackendPool:
+    """Bounded LRU pool of built backends keyed on :func:`build_key`.
+
+    An entry is ``(connectome, backend)`` — the expensive host-side
+    table construction plus every executable its caches accumulate.
+    ``capacity`` bounds how many distinct network configurations stay
+    resident; eviction drops the backend (its device tables and compiled
+    programs are freed once no live session references them — sessions
+    holding a reference keep working, they just stop sharing).
+    """
+
+    def __init__(self, capacity: int = 8):
+        self._cache = ExecutableCache("serve.backends", capacity=capacity)
+
+    def get(self, exp):
+        """The shared ``(connectome, backend)`` for this experiment —
+        built at most once per distinct build config."""
+        try:
+            key = build_key(exp)
+        except (TypeError, ValueError):
+            # non-serializable spec (callable probes / custom objects):
+            # fall back to a private, unshared build
+            return self._build(exp)
+        return self._cache.get_or_build(key, lambda: self._build(exp))
+
+    @staticmethod
+    def _build(exp):
+        from repro.api.backends import make_backend
+        from repro.core.connectivity import build_connectome
+        model = exp.model
+        connectome = build_connectome(
+            scale=getattr(model, "scale", None),
+            n_scaling=model.n_scaling, k_scaling=model.k_scaling,
+            seed=int(model.seed), dt=model.dt)
+        backend = make_backend(exp.backend, plasticity=exp.plasticity)
+        # sessions skip the rebuild via Backend.built_for, so build here
+        # once against the pooled connectome
+        from repro.core.engine import SimConfig
+        from repro.core import stimulus as stimulus_mod
+        cfg = SimConfig(
+            dt=model.dt, strategy=model.strategy,
+            spike_budget=model.spike_budget,
+            strict_delivery=model.strict_delivery,
+            stimulus=(stimulus_mod.resolve_timeline(exp.stimulus)
+                      if exp.stimulus else None))
+        backend.build(connectome, cfg)
+        return connectome, backend
+
+    def stats(self) -> Dict[str, Any]:
+        return self._cache.stats()
+
+
+class Session:
+    """One live simulation session inside a :class:`SessionManager`."""
+
+    def __init__(self, sid: str, experiment, sim, ckpt_dir: str):
+        self.id = sid
+        self.experiment = experiment
+        self.sim = sim
+        self.ckpt_dir = ckpt_dir
+        self.status = "running"           # running | suspended | closed
+        self.created_unix = time.time()
+        self.t_model_ms = 0.0
+        self.n_runs = 0
+
+    # -- operations ---------------------------------------------------------
+
+    def run(self, t_ms: float, *, chunk_ms: Optional[float] = None,
+            callback=None):
+        """Advance ``t_ms`` of model time; returns the ``RunResult``.
+
+        ``chunk_ms`` switches to ``run_chunked`` (bounded device memory,
+        per-chunk ``callback(i, chunk_result)`` — the HTTP front end
+        streams its snapshots from exactly this hook)."""
+        self._check_open()
+        if self.status == "suspended":
+            raise RuntimeError(
+                f"session {self.id!r} is suspended; resume() it first")
+        if chunk_ms is not None:
+            res = self.sim.run_chunked(t_ms, chunk_ms, callback=callback)
+        else:
+            res = self.sim.run(t_ms)
+            if callback is not None:
+                callback(1, res)
+        self.t_model_ms += res.t_model_ms
+        self.n_runs += 1
+        return res
+
+    def step(self, n_steps: int = 1):
+        """Advance whole engine steps (``n_steps * dt`` of model time)."""
+        if int(n_steps) < 1:
+            raise ValueError(f"n_steps must be >= 1, got {n_steps}")
+        return self.run(int(n_steps) * self.sim.sim_config.dt)
+
+    def suspend(self) -> str:
+        """Checkpoint to the session's directory and free device state."""
+        self._check_open()
+        if self.status == "suspended":
+            return self.ckpt_dir
+        path = self.sim.suspend(self.ckpt_dir)
+        self.status = "suspended"
+        return path
+
+    def resume(self) -> None:
+        """Re-materialise a suspended session from its checkpoint."""
+        self._check_open()
+        if self.status != "suspended":
+            return
+        self.sim.resume(self.ckpt_dir)
+        self.status = "running"
+
+    def close(self) -> None:
+        if self.status == "closed":
+            return
+        self.status = "closed"
+        self.sim = None                   # drop device state
+        shutil.rmtree(self.ckpt_dir, ignore_errors=True)
+
+    def _check_open(self) -> None:
+        if self.status == "closed":
+            raise RuntimeError(f"session {self.id!r} is closed")
+
+    # -- introspection ------------------------------------------------------
+
+    def info(self) -> Dict[str, Any]:
+        return {
+            "id": self.id,
+            "status": self.status,
+            "scenario": self.experiment.name or "<unnamed>",
+            "backend": self.experiment.backend,
+            "plastic": self.experiment.plasticity is not None,
+            "t_model_ms": self.t_model_ms,
+            "n_runs": self.n_runs,
+            "created_unix": self.created_unix,
+        }
+
+
+class SessionManager:
+    """Create / run / suspend / resume / destroy sessions over the pool.
+
+    ``root`` is where suspended sessions checkpoint (a temp directory,
+    removed on ``close()``, unless given).  ``max_backends`` bounds the
+    backend pool.  All mutating operations serialize on one lock: the
+    device is the contended resource and interleaving half-finished runs
+    would only thrash it (requests queue; batching is the way to overlap
+    same-config work — :meth:`run_many`).
+    """
+
+    def __init__(self, root: Optional[str] = None, max_backends: int = 8,
+                 warm_ms: Optional[float] = None):
+        self._own_root = root is None
+        self.root = root or tempfile.mkdtemp(prefix="repro-serve-")
+        self.pool = BackendPool(capacity=max_backends)
+        self.warm_ms = warm_ms
+        self._sessions: Dict[str, Session] = {}
+        self._ids = itertools.count(1)
+        self._lock = threading.RLock()
+        self._closed = False
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def create(self, spec, *, session_id: Optional[str] = None,
+               seed: Optional[int] = None) -> Session:
+        """Create a session from a scenario (Experiment / dict / path).
+
+        ``seed`` overrides the *dynamical* seed only (the initial-state
+        PRNG key): the connectome — and therefore the shared backend —
+        stays that of the scenario, so seeded replicas of one scenario
+        all share one compilation, exactly like ``run_batch`` trials.
+        """
+        import jax
+        exp = _experiment_from(spec)
+        with self._lock:
+            self._check_open()
+            sid = session_id or f"s{next(self._ids):04d}"
+            if sid in self._sessions:
+                raise ValueError(f"session id {sid!r} already exists")
+            connectome, backend = self.pool.get(exp)
+            key = None if seed is None else jax.random.PRNGKey(int(seed))
+            sim = exp.make_simulator(connectome, backend=backend, key=key)
+            if self.warm_ms is not None:
+                sim.warmup(self.warm_ms)
+            session = Session(sid, exp, sim,
+                              os.path.join(self.root, sid))
+            self._sessions[sid] = session
+            return session
+
+    def get(self, sid: str) -> Session:
+        with self._lock:
+            if sid not in self._sessions:
+                raise KeyError(f"no session {sid!r} (live: "
+                               f"{sorted(self._sessions)})")
+            return self._sessions[sid]
+
+    def destroy(self, sid: str) -> None:
+        with self._lock:
+            self.get(sid).close()
+            del self._sessions[sid]
+
+    def close(self) -> None:
+        """Close every session and (if owned) remove the checkpoint root."""
+        with self._lock:
+            for sid in list(self._sessions):
+                self.destroy(sid)
+            if self._own_root:
+                shutil.rmtree(self.root, ignore_errors=True)
+            self._closed = True
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError("SessionManager is closed")
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- operations ---------------------------------------------------------
+
+    def run(self, sid: str, t_ms: float, **kwargs):
+        with self._lock:
+            return self.get(sid).run(t_ms, **kwargs)
+
+    def step(self, sid: str, n_steps: int = 1):
+        with self._lock:
+            return self.get(sid).step(n_steps)
+
+    def suspend(self, sid: str) -> str:
+        with self._lock:
+            return self.get(sid).suspend()
+
+    def resume(self, sid: str) -> None:
+        with self._lock:
+            self.get(sid).resume()
+
+    def run_many(self, requests: Union[Dict[str, float], List[tuple]],
+                 coalesce: bool = True) -> Dict[str, Any]:
+        """Run many sessions; same-config groups coalesce through the
+        vmapped ``run_batch`` path (see :mod:`repro.serve.batching`).
+
+        ``requests`` maps session id -> t_ms (or a list of pairs).
+        Returns ``{sid: RunResult}``; results are bitwise-equal to
+        running each session sequentially."""
+        from repro.serve.batching import run_coalesced
+        items = (requests.items() if isinstance(requests, dict)
+                 else list(requests))
+        with self._lock:
+            pairs = [(self.get(sid), float(t_ms)) for sid, t_ms in items]
+            return run_coalesced(pairs, coalesce=coalesce)
+
+    # -- introspection ------------------------------------------------------
+
+    def sessions(self) -> List[Dict[str, Any]]:
+        with self._lock:
+            return [s.info() for s in self._sessions.values()]
+
+    def stats(self) -> Dict[str, Any]:
+        """Sessions + every compile-cache counter in the process."""
+        with self._lock:
+            by_status: Dict[str, int] = {}
+            for s in self._sessions.values():
+                by_status[s.status] = by_status.get(s.status, 0) + 1
+            return {
+                "sessions": {"count": len(self._sessions), **by_status},
+                "backend_pool": self.pool.stats(),
+                "compile_caches": cache_stats(),
+            }

@@ -1,0 +1,325 @@
+"""Serve subsystem: compile-cache keying, session lifecycle, batching, HTTP.
+
+The acceptance pins of PR 6:
+  * two sessions from the same scenario trigger exactly ONE backend
+    compilation (asserted via the compile-cache counters);
+  * differing probe set / strategy / scale produce distinct cache
+    entries;
+  * batched (coalesced) session runs are bitwise-equal to sequential;
+  * suspend frees device state and resume continues bitwise;
+  * checkpoint payloads are schema-versioned and mismatches raise a
+    CheckpointMismatchError naming the problem.
+"""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.api.experiment import Experiment
+from repro.configs.microcircuit import MicrocircuitConfig
+from repro.serve import (ExecutableCache, SessionManager, cache_stats,
+                         fingerprint)
+from repro.serve.session import build_key
+
+
+def _experiment(**model_overrides) -> Experiment:
+    probes = model_overrides.pop("probes", ("pop_counts",))
+    fields = dict(n_scaling=0.02, k_scaling=0.02, t_presim=10.0, seed=7)
+    fields.update(model_overrides)
+    model = MicrocircuitConfig(**fields)
+    return Experiment(model=model, probes=probes, duration_ms=20.0,
+                      name="serve-test")
+
+
+def _compiles() -> int:
+    return cache_stats()["compiles"]
+
+
+# ---------------------------------------------------------------------------
+# ExecutableCache unit behaviour
+# ---------------------------------------------------------------------------
+
+def test_executable_cache_counters_and_lru():
+    cache = ExecutableCache("unit.test", capacity=2)
+    builds = []
+
+    def builder(v):
+        return lambda: builds.append(v) or v
+
+    assert cache.get_or_build("a", builder(1)) == 1
+    assert cache.get_or_build("a", builder(99)) == 1   # hit: no rebuild
+    assert cache.get_or_build("b", builder(2)) == 2
+    assert cache.stats()["hits"] == 1
+    assert cache.stats()["misses"] == 2
+    assert builds == [1, 2]
+
+    evicted = []
+    cache.on_evict(lambda k, v: evicted.append(k))
+    cache.get_or_build("c", builder(3))                # evicts LRU "a"
+    assert evicted == ["a"]
+    assert cache.stats()["evictions"] == 1
+    assert cache.peek("a") is None
+    assert cache.peek("b") == 2                        # peek counts a hit
+    assert cache.stats()["hits"] == 2
+
+    cache.clear()
+    assert cache.stats()["entries"] == 0
+    # counters survive clear (they meter compilations, not residency)
+    assert cache.stats()["misses"] == 3
+
+
+def test_fingerprint_is_stable_and_order_insensitive():
+    a = fingerprint({"x": 1, "y": [1, 2], "z": {"k": np.float32(0.5)}})
+    b = fingerprint({"z": {"k": 0.5}, "y": [1, 2], "x": 1})
+    assert a == b
+    assert a != fingerprint({"x": 1, "y": [2, 1], "z": {"k": 0.5}})
+
+
+def test_build_key_excludes_probes_and_duration():
+    base = _experiment()
+    assert build_key(base) == build_key(
+        dataclasses.replace(base, probes=("pop_counts", "total_counts"),
+                            duration_ms=500.0))
+    assert build_key(base) != build_key(
+        dataclasses.replace(base, model=dataclasses.replace(
+            base.model, strategy="dense")))
+
+
+# ---------------------------------------------------------------------------
+# Compile-cache keying across sessions (the PR's acceptance assertion)
+# ---------------------------------------------------------------------------
+
+def test_same_scenario_sessions_compile_once():
+    exp = _experiment()
+    with SessionManager() as mgr:
+        s1 = mgr.create(exp, seed=5)
+        r1 = s1.run(20.0)
+        after_first = _compiles()
+
+        s2 = mgr.create(exp, seed=5)
+        r2 = s2.run(20.0)
+        # exactly one backend compilation for both sessions
+        assert _compiles() == after_first
+        assert mgr.pool.stats()["hits"] == 1
+        assert mgr.pool.stats()["misses"] == 1
+        assert s1.sim.backend is s2.sim.backend
+        # same seed + shared backend => bitwise-identical dynamics
+        np.testing.assert_array_equal(r1.data["pop_counts"],
+                                      r2.data["pop_counts"])
+
+
+def test_distinct_probe_sets_share_backend_not_executable():
+    exp = _experiment()
+    with SessionManager() as mgr:
+        s1 = mgr.create(exp)
+        s1.run(20.0)
+        pool_misses = mgr.pool.stats()["misses"]
+        before = _compiles()
+
+        exp2 = dataclasses.replace(exp,
+                                   probes=("pop_counts", "total_counts"))
+        s2 = mgr.create(exp2)
+        s2.run(20.0)
+        # same backend (no pool miss), but a new executable was compiled
+        assert mgr.pool.stats()["misses"] == pool_misses
+        assert s2.sim.backend is s1.sim.backend
+        assert _compiles() > before
+
+
+def test_distinct_strategy_and_scale_get_distinct_backends():
+    exp = _experiment()
+    with SessionManager() as mgr:
+        mgr.create(exp)
+        assert mgr.pool.stats()["misses"] == 1
+        mgr.create(dataclasses.replace(exp, model=dataclasses.replace(
+            exp.model, strategy="dense")))
+        assert mgr.pool.stats()["misses"] == 2
+        mgr.create(dataclasses.replace(exp, model=dataclasses.replace(
+            exp.model, n_scaling=0.03, k_scaling=0.03)))
+        assert mgr.pool.stats()["misses"] == 3
+        assert mgr.pool.stats()["entries"] == 3
+
+
+# ---------------------------------------------------------------------------
+# Request batching: coalesced == sequential, bitwise
+# ---------------------------------------------------------------------------
+
+def test_coalesced_run_matches_sequential_bitwise():
+    exp = _experiment()
+    with SessionManager() as mgr:
+        seeds = [11, 22, 33]
+        co = [mgr.create(exp, seed=s) for s in seeds]
+        seq = [mgr.create(exp, seed=s) for s in seeds]
+
+        r_co = mgr.run_many({s.id: 20.0 for s in co}, coalesce=True)
+        r_seq = mgr.run_many({s.id: 20.0 for s in seq}, coalesce=False)
+
+        for a, b in zip(co, seq):
+            np.testing.assert_array_equal(
+                r_co[a.id].data["pop_counts"],
+                r_seq[b.id].data["pop_counts"])
+            assert a.t_model_ms == b.t_model_ms == 20.0
+        # session state advanced identically too: a follow-up run agrees
+        f_co = mgr.run_many({co[0].id: 10.0})
+        f_seq = mgr.run_many({seq[0].id: 10.0}, coalesce=False)
+        np.testing.assert_array_equal(
+            f_co[co[0].id].data["pop_counts"],
+            f_seq[seq[0].id].data["pop_counts"])
+
+
+def test_run_many_rejects_suspended_sessions():
+    exp = _experiment()
+    with SessionManager() as mgr:
+        s1 = mgr.create(exp)
+        s1.run(10.0)
+        mgr.suspend(s1.id)
+        with pytest.raises(RuntimeError, match="suspended"):
+            mgr.run_many({s1.id: 10.0})
+
+
+# ---------------------------------------------------------------------------
+# Suspend / resume
+# ---------------------------------------------------------------------------
+
+def test_suspend_frees_state_and_resume_is_bitwise():
+    exp = _experiment()
+    with SessionManager() as mgr:
+        a = mgr.create(exp, seed=3)
+        b = mgr.create(exp, seed=3)          # uninterrupted twin
+        a.run(10.0)
+        b.run(10.0)
+
+        mgr.suspend(a.id)
+        assert a.status == "suspended"
+        assert a.sim.suspended and a.sim._state is None
+        with pytest.raises(RuntimeError, match="suspended"):
+            a.run(10.0)
+        mgr.suspend(a.id)                    # idempotent
+
+        mgr.resume(a.id)
+        assert a.status == "running"
+        ra = a.run(10.0)
+        rb = b.run(10.0)
+        np.testing.assert_array_equal(ra.data["pop_counts"],
+                                      rb.data["pop_counts"])
+
+
+def test_plastic_session_suspend_resume_bitwise():
+    """The headline use: an idle plastic session parks weights + traces
+    on disk, costs no device memory, and continues learning bitwise."""
+    exp = dataclasses.replace(_experiment(), plasticity="pair_stdp")
+    with SessionManager() as mgr:
+        a = mgr.create(exp, seed=4)
+        b = mgr.create(exp, seed=4)
+        assert a.sim.backend is b.sim.backend      # plastic builds share too
+        a.run(10.0)
+        b.run(10.0)
+        mgr.suspend(a.id)
+        assert a.sim._state is None
+        mgr.resume(a.id)
+        ra = a.run(10.0)
+        rb = b.run(10.0)
+        np.testing.assert_array_equal(ra.data["pop_counts"],
+                                      rb.data["pop_counts"])
+
+
+def test_step_advances_whole_engine_steps():
+    exp = _experiment()
+    with SessionManager() as mgr:
+        s = mgr.create(exp)
+        res = mgr.step(s.id, 5)
+        assert res.n_steps == 5
+        # presim is untimed/uncounted; the session advanced 5 steps
+        assert s.sim._steps_done == 5
+        assert s.t_model_ms == pytest.approx(5 * exp.model.dt)
+        with pytest.raises(ValueError):
+            s.step(0)
+
+
+def test_destroyed_session_is_gone():
+    exp = _experiment()
+    with SessionManager() as mgr:
+        s = mgr.create(exp)
+        ckpt = s.ckpt_dir
+        mgr.suspend(s.id)
+        assert os.path.isdir(ckpt)
+        mgr.destroy(s.id)
+        assert not os.path.isdir(ckpt)
+        with pytest.raises(KeyError):
+            mgr.get(s.id)
+        with pytest.raises(RuntimeError, match="closed"):
+            s.run(10.0)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint schema versioning (satellite: versioned payloads)
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_schema_mismatch_raises(tmp_path):
+    from repro.checkpoint.checkpointer import (CheckpointMismatchError,
+                                               latest_step)
+    exp = _experiment()
+    sim = exp.make_simulator()
+    sim.run(10.0)
+    sim.save(str(tmp_path))
+    step = latest_step(str(tmp_path))
+    manifest = tmp_path / f"step_{step:08d}" / "manifest.json"
+    doc = json.loads(manifest.read_text())
+    assert doc["schema"] == "repro.checkpoint/v1"
+    doc["schema"] = "repro.checkpoint/v99"
+    manifest.write_text(json.dumps(doc))
+    with pytest.raises(CheckpointMismatchError, match="v99"):
+        sim.restore(str(tmp_path))
+
+
+def test_checkpoint_shape_mismatch_names_leaf(tmp_path):
+    from repro.checkpoint.checkpointer import CheckpointMismatchError
+    _experiment().make_simulator().save(str(tmp_path))
+    other = _experiment(n_scaling=0.03, k_scaling=0.03).make_simulator()
+    with pytest.raises(CheckpointMismatchError, match="shape"):
+        other.restore(str(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# HTTP front end
+# ---------------------------------------------------------------------------
+
+def test_http_lifecycle_and_streaming():
+    from repro.serve import ServeClient, SimServer
+    exp = _experiment()
+    server = SimServer(port=0).start()
+    try:
+        client = ServeClient(server.url)
+        assert client.healthz()["ok"]
+
+        created = client.create(experiment=exp.to_dict(), seed=9)
+        sid = created["id"]
+        assert created["status"] == "running"
+
+        records = client.run(sid, t_ms=20.0, chunk_ms=10.0)
+        chunks = [r for r in records if "chunk" in r]
+        assert len(chunks) == 2
+        assert all("pop_spikes" in c for c in chunks)
+        assert records[-1]["done"] and \
+            records[-1]["session_t_model_ms"] == 20.0
+
+        client.suspend(sid)
+        assert client.sessions()[0]["status"] == "suspended"
+        client.resume(sid)
+        out = client.run_many({sid: 10.0})
+        assert out[sid]["t_model_ms"] == 10.0
+
+        stats = client.stats()
+        assert stats["sessions"]["count"] == 1
+        assert stats["compile_caches"]["compiles"] >= 1
+
+        client.destroy(sid)
+        assert client.sessions() == []
+
+        with pytest.raises(Exception):        # urllib raises HTTPError 404
+            client.suspend("nope")
+        client.shutdown()
+    finally:
+        server.stop()
