@@ -1,0 +1,41 @@
+"""Static analysis + runtime sanitizers guarding the hot path.
+
+Four layers, one subsystem (see ``python -m repro.analysis --help``):
+
+* :mod:`repro.analysis.lint` — AST rules RL001-RL005 (host syncs,
+  traced branches, plugin conformance, dtype discipline, unlocked
+  shared state),
+* :mod:`repro.analysis.sanitize` — runtime: :func:`sanitize` (strict
+  JAX modes) and :class:`RecompileGuard` (compile budgets over the
+  ``ExecutableCache`` counters),
+* :mod:`repro.analysis.hlo_contract` — HLO001-HLO004 contracts on what
+  the fused step compiles to,
+* :mod:`repro.analysis.report` — the ``repro.analysis_report/v1`` JSON
+  schema and the ``ANALYSIS_BASELINE.json`` grandfathering diff.
+
+Only the runtime pieces import eagerly (``repro.api.simulator`` pulls in
+:class:`RecompileGuard` on the hot import path); the analysis passes
+resolve lazily.
+"""
+from repro.analysis.report import (BASELINE_SCHEMA, REPORT_SCHEMA,  # noqa: F401
+                                   BaselineEntry, Diff, Finding,
+                                   diff_findings, load_baseline,
+                                   make_report, write_report)
+from repro.analysis.sanitize import (RecompileBudgetError,  # noqa: F401
+                                     RecompileGuard, guard_compiles,
+                                     sanitize)
+
+__all__ = [
+    "Finding", "BaselineEntry", "Diff", "diff_findings", "load_baseline",
+    "make_report", "write_report", "REPORT_SCHEMA", "BASELINE_SCHEMA",
+    "sanitize", "RecompileGuard", "RecompileBudgetError", "guard_compiles",
+    "lint", "hlo_contract",
+]
+
+
+def __getattr__(name):
+    # lazy: the lint/HLO passes are CLI/test tools, not hot-path imports
+    if name in ("lint", "hlo_contract"):
+        import importlib
+        return importlib.import_module(f"repro.analysis.{name}")
+    raise AttributeError(f"module 'repro.analysis' has no attribute {name!r}")

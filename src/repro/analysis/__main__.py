@@ -1,0 +1,151 @@
+"""``python -m repro.analysis`` — the static-analysis / sanitizer CLI.
+
+Subcommands::
+
+    lint     AST lint (RL001-RL005) over src/repro, diffed against the
+             committed ANALYSIS_BASELINE.json
+    hlo      HLO contract checks (HLO001-HLO004) for committed scenarios
+    modules  unreachable-module report (the dead-weight detector)
+
+Exit codes: 0 clean (or everything grandfathered), 5 on new findings —
+distinct from the api CLI's validation exit (4) and the benchmark
+comparator's regression exit (3), so CI logs identify the failing gate
+from the code alone.
+"""
+from __future__ import annotations
+
+import argparse
+import datetime
+import json
+import os
+import sys
+
+EXIT_FINDINGS = 5
+
+
+def _report_and_exit(findings, baseline_path, json_out, tool, extra=None):
+    from repro.analysis.report import (diff_findings, load_baseline,
+                                       make_report, write_report)
+    baseline = []
+    if baseline_path and os.path.exists(baseline_path):
+        baseline = load_baseline(baseline_path)
+    diff = diff_findings(findings, baseline, datetime.date.today())
+    doc = make_report(findings, diff, tool=tool, extra=extra)
+    if json_out:
+        write_report(doc, json_out)
+    for f in diff.grandfathered:
+        print(f"grandfathered: {f.format()}")
+    for f in diff.expired:
+        print(f"EXPIRED baseline, finding active again: {f.format()}")
+    for f in diff.new:
+        print(f"NEW: {f.format()}")
+    for e in diff.stale:
+        print(f"stale baseline entry (matched nothing): {e.rule} "
+              f"{e.path} [{e.symbol}]")
+    s = doc["summary"]
+    print(f"{tool}: {s['total']} finding(s) — {s.get('new', 0)} new, "
+          f"{s.get('grandfathered', 0)} grandfathered, "
+          f"{s.get('expired', 0)} expired, "
+          f"{s.get('stale_baseline', 0)} stale baseline entr(ies)")
+    return 0 if diff.ok else EXIT_FINDINGS
+
+
+def cmd_lint(args) -> int:
+    from repro.analysis.lint import LintConfig, lint_paths
+    from repro.analysis.report import baseline_from_findings
+    findings = lint_paths(args.paths, LintConfig(), repo_root=args.root)
+    if args.write_baseline:
+        doc = baseline_from_findings(findings, reason=args.reason)
+        with open(args.baseline, "w") as f:
+            json.dump(doc, f, indent=2)
+            f.write("\n")
+        print(f"wrote {len(doc['entries'])} baseline entr(ies) to "
+              f"{args.baseline}")
+        return 0
+    return _report_and_exit(findings, args.baseline, args.json,
+                            tool="repro.analysis.lint")
+
+
+def cmd_hlo(args) -> int:
+    from repro.analysis.hlo_contract import check_scenarios
+    findings = check_scenarios(args.scenarios or None,
+                               n_steps=args.n_steps,
+                               max_converts=args.max_converts)
+    # HLO contracts are hard invariants: no baseline, every finding fails
+    return _report_and_exit(findings, None, args.json,
+                            tool="repro.analysis.hlo")
+
+
+def cmd_modules(args) -> int:
+    from repro.analysis.lint import index_paths, unreachable_modules
+    modules = index_paths([args.src] + list(args.entry_scripts),
+                          repo_root=args.root)
+    entries = list(args.entry)
+    dead = unreachable_modules(modules, entries)
+    doc = {"schema": "repro.analysis_report/v1",
+           "tool": "repro.analysis.modules",
+           "entry_modules": entries,
+           "unreachable": dead,
+           "summary": {"total": len(dead)}}
+    if args.json:
+        from repro.analysis.report import write_report
+        write_report(doc, args.json)
+    for m in dead:
+        print(f"unreachable: {m}")
+    print(f"repro.analysis.modules: {len(dead)} module(s) unreachable "
+          f"from {len(entries)} entry point(s) + entry scripts")
+    return 0        # informational: excision happens in review, not CI
+
+
+DEFAULT_ENTRIES = (
+    "repro.api.__main__", "repro.serve.__main__", "repro.analysis.__main__",
+    "repro.api", "repro.validate.compare", "repro.perf.hlo_analysis",
+    "repro.launch.dryrun",      # python -m entry, not reached via imports
+)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="JAX-aware static analysis for the microcircuit repo")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("lint", help="AST lint rules RL001-RL005")
+    p.add_argument("--paths", nargs="*", default=["src/repro"],
+                   help="files/directories to lint")
+    p.add_argument("--root", default=".", help="repo root for rel paths")
+    p.add_argument("--baseline", default="ANALYSIS_BASELINE.json")
+    p.add_argument("--json", default=None, metavar="OUT",
+                   help="write repro.analysis_report/v1 JSON here")
+    p.add_argument("--write-baseline", action="store_true",
+                   help="(re)write the baseline from current findings")
+    p.add_argument("--reason", default="grandfathered at introduction")
+    p.set_defaults(fn=cmd_lint)
+
+    p = sub.add_parser("hlo", help="HLO contract checks for scenarios")
+    p.add_argument("scenarios", nargs="*",
+                   help="scenario JSONs (default examples/scenarios/*)")
+    p.add_argument("--n-steps", type=int, default=16)
+    p.add_argument("--max-converts", type=int, default=None)
+    p.add_argument("--json", default=None, metavar="OUT")
+    p.set_defaults(fn=cmd_hlo)
+
+    p = sub.add_parser("modules", help="unreachable-module report")
+    p.add_argument("--src", default="src/repro")
+    p.add_argument("--root", default=".")
+    p.add_argument("--entry", nargs="*", default=list(DEFAULT_ENTRIES))
+    p.add_argument("--entry-scripts", nargs="*",
+                   default=["examples", "benchmarks", "tests"],
+                   help="directories whose scripts count as import roots")
+    p.add_argument("--json", default=None, metavar="OUT")
+    p.set_defaults(fn=cmd_modules)
+
+    args = ap.parse_args(argv)
+    if getattr(args, "max_converts", 0) is None:
+        from repro.analysis.hlo_contract import DEFAULT_MAX_CONVERTS
+        args.max_converts = DEFAULT_MAX_CONVERTS
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,155 @@
+"""HLO contract checks: assert what the fused step *lowers to*.
+
+The static linter (``repro.analysis.lint``) guards the Python source;
+this module guards the other end of the pipeline — the compiled HLO of
+the fused scan — using :func:`repro.perf.hlo_analysis.op_census`:
+
+HLO001  the entry computation contains exactly one ``while`` (the
+        ``lax.scan``); zero means the loop was unrolled or never built,
+        two+ means the step escaped fusion into multiple loops,
+HLO002  zero host-callback ``custom-call`` targets anywhere in the
+        module (each would be a device->host round trip *per step*);
+        non-callback custom-calls — Pallas kernels, topk — are allowed,
+HLO003  the module-wide ``convert`` count stays under a budget: a jump
+        in dtype conversions means an implicit-promotion surface opened
+        up inside the step,
+HLO004  no ``f64`` tensors anywhere in the module — the HLO-level dtype
+        contract that no source-level allowlist can hide from.
+
+``python -m repro.analysis hlo`` pins these for every committed scenario
+(``examples/scenarios/*.json``): the scenario is loaded, its fused
+runner is lowered and compiled exactly as ``Simulator.run`` would, and
+the census is asserted.  Scenarios are checked at a reduced scale — the
+contract is structural (which ops appear), not quantitative (how big
+they are), so a small connectome proves the same property faster.
+"""
+from __future__ import annotations
+
+import glob as glob_mod
+import os
+from typing import List, Optional, Sequence
+
+from repro.analysis.report import Finding
+from repro.perf.hlo_analysis import op_census
+
+#: convert-count ceiling for the fused step module.  The legitimate
+#: converts are dtype casts at scan boundaries (counter widening, bool
+#: masks, probe reductions) — a handful per probe, not per neuron; a
+#: breach means per-step implicit promotion.
+DEFAULT_MAX_CONVERTS = 64
+
+#: substrings identifying host-callback custom-call targets (jax callback
+#: machinery lowers to targets like ``xla_python_cpu_callback`` /
+#: ``xla_ffi_python_cpu_callback``).
+_CALLBACK_MARKERS = ("callback", "py_func", "host_compute")
+
+
+def fused_step_hlo(sim, n_steps: int = 16,
+                   probes: Optional[Sequence] = None) -> str:
+    """Compiled HLO text of the fused step program of a Simulator.
+
+    Lowers exactly what ``Simulator.run`` executes — the backend's scan
+    runner over its resolved config, probes included — via the AOT path,
+    so nothing runs on the device.
+    """
+    import jax
+    from repro.api import probes as probes_mod
+    from repro.api.probes import split_probes
+
+    backend = sim.backend
+    if not hasattr(backend, "_runner"):
+        raise TypeError(f"backend {backend.name!r} has no fused scan "
+                        f"runner; HLO contracts apply to 'fused'")
+    pr = sim.probes if probes is None else probes_mod.resolve(probes)
+    pr = tuple(pr)
+    _, stream_probes = split_probes(pr)
+    carries = backend._stream_carries(stream_probes, None)
+    fn = jax.jit(backend._runner(n_steps, pr))
+    state = sim.state if sim.state is not None \
+        else backend.init(jax.random.PRNGKey(0))
+    compiled = fn.lower(*backend._args(state), carries).compile()
+    return compiled.as_text()
+
+
+def check_hlo(hlo: str, *, symbol: str = "<hlo>", path: str = "",
+              max_converts: int = DEFAULT_MAX_CONVERTS) -> List[Finding]:
+    """Run contracts HLO001-HLO004 on an HLO module's text."""
+    census = op_census(hlo)
+    out: List[Finding] = []
+
+    whiles = census["entry_whiles"]
+    if whiles != 1:
+        out.append(Finding(
+            "HLO001", path, 0, symbol,
+            f"fused step must lower to exactly 1 entry-level while "
+            f"(the scan), found {whiles}"))
+
+    callbacks = {t: n for t, n in census["custom_call_targets"].items()
+                 if any(m in t.lower() for m in _CALLBACK_MARKERS)}
+    if callbacks:
+        out.append(Finding(
+            "HLO002", path, 0, symbol,
+            f"host-callback custom-call(s) in the step program: "
+            f"{callbacks} — each is a device->host sync per invocation"))
+
+    if census["converts"] > max_converts:
+        out.append(Finding(
+            "HLO003", path, 0, symbol,
+            f"{census['converts']} convert ops (budget {max_converts}) "
+            f"— an implicit-promotion surface opened inside the step"))
+
+    if census["f64_tensors"]:
+        out.append(Finding(
+            "HLO004", path, 0, symbol,
+            f"{census['f64_tensors']} f64 tensor(s) in the compiled "
+            f"step — the engine contract is f32/bf16 end to end"))
+    return out
+
+
+def check_scenario(path: str, *, n_steps: int = 16,
+                   max_converts: int = DEFAULT_MAX_CONVERTS,
+                   scale: float = 0.02) -> List[Finding]:
+    """Contract-check one committed scenario JSON.
+
+    The scenario's model is instantiated at a contract-checking scale
+    (structure is scale-invariant; compile time is not) on its own
+    backend when fused, else on a fused stand-in of the same model so
+    every scenario pins the step it would run under ``backend: fused``.
+    """
+    import dataclasses as dc
+    from repro.api.experiment import Experiment
+
+    exp = Experiment.from_json(path)
+    model = exp.model
+    if getattr(model, "scale", None) is not None and model.scale > scale:
+        model = dc.replace(model, scale=scale)
+    if exp.backend != "fused":
+        exp = dc.replace(exp, backend="fused", model=model)
+    else:
+        exp = dc.replace(exp, model=model)
+    sim = exp.make_simulator()
+    symbol = exp.name or os.path.basename(path)
+    hlo = fused_step_hlo(sim, n_steps=n_steps)
+    return check_hlo(hlo, symbol=symbol, path=_relpath(path),
+                     max_converts=max_converts)
+
+
+def _relpath(path: str) -> str:
+    rel = os.path.relpath(path)
+    return rel.replace(os.sep, "/") if not rel.startswith("..") \
+        else path.replace(os.sep, "/")
+
+
+def check_scenarios(paths: Optional[Sequence[str]] = None, *,
+                    n_steps: int = 16,
+                    max_converts: int = DEFAULT_MAX_CONVERTS
+                    ) -> List[Finding]:
+    """Contract-check many scenarios (default: examples/scenarios/*.json)."""
+    if not paths:
+        paths = sorted(glob_mod.glob(
+            os.path.join("examples", "scenarios", "*.json")))
+    findings: List[Finding] = []
+    for p in paths:
+        findings.extend(check_scenario(p, n_steps=n_steps,
+                                       max_converts=max_converts))
+    return findings

@@ -1,0 +1,128 @@
+"""Runtime sanitizers: strict JAX modes and the recompile guard.
+
+Two complementary guards for things the static linter cannot see:
+
+:func:`sanitize`
+    A context manager flipping JAX into its strict diagnostic modes —
+    ``jax_debug_nans`` (fail at the op that produced the first NaN
+    instead of ``validate`` failing 10 biological seconds later) and
+    ``jax_numpy_dtype_promotion="strict"`` (implicit f32→f64 promotion
+    becomes an error instead of a silent 2x memory + compile-cache-miss
+    tax).  Flags are restored on exit, so tests can wrap a single run.
+
+:class:`RecompileGuard`
+    Budgets *compiles* over a block of code, built on the PR-6
+    :class:`~repro.serve.compile_cache.ExecutableCache` counters (a
+    cache miss is by construction one builder invocation — for the
+    backend executable caches, one XLA trace+compile).  The hot paths
+    that must be compile-free after warmup (``run_chunked`` chunks 2..N,
+    batched re-runs, suspend/resume) wrap themselves in a zero-budget
+    guard, so a silent retrace — a probe tuple rebuilt unsorted, a shape
+    drifting by one — fails loudly at the call site that caused it
+    instead of showing up as a 100x RTF regression in the next bench.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, Optional, Sequence, Tuple
+
+
+class RecompileBudgetError(RuntimeError):
+    """A guarded block compiled more programs than its budget allows."""
+
+
+def _cache_universe(caches=None):
+    from repro.serve.compile_cache import iter_caches
+    return list(caches) if caches is not None else iter_caches()
+
+
+class RecompileGuard:
+    """Fail a block if compile-cache misses exceed ``budget``.
+
+    ``caches=None`` guards every live :class:`ExecutableCache` in the
+    process — including caches *created inside* the block (a fresh cache
+    starts at zero misses, so its compiles count in full).  Pass an
+    explicit sequence to scope the guard to one backend's caches.
+
+    Usage::
+
+        with RecompileGuard(budget=0, what="run_chunked chunk 3"):
+            backend.run(state, n_steps, probes)   # must hit the cache
+
+    The guard is re-entrant-safe (each instance snapshots independently)
+    and costs two counter sweeps — nothing on the device.
+    """
+
+    def __init__(self, budget: int = 0, caches=None,
+                 what: str = "guarded block"):
+        if budget < 0:
+            raise ValueError(f"budget must be >= 0, got {budget}")
+        self.budget = int(budget)
+        self.what = what
+        self._caches = caches
+        self._before: Dict[int, Tuple[str, int, frozenset]] = {}
+        self.compiles: Optional[int] = None     # set on exit
+
+    def __enter__(self) -> "RecompileGuard":
+        self._before = {
+            id(c): (c.name, c.misses, frozenset(map(str, c.keys())))
+            for c in _cache_universe(self._caches)
+        }
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        after = _cache_universe(self._caches)
+        total = 0
+        detail = []
+        for c in after:
+            name, before_misses, before_keys = self._before.get(
+                id(c), (c.name, 0, frozenset()))
+            delta = c.misses - before_misses
+            if delta <= 0:
+                continue
+            total += delta
+            new_keys = sorted(set(map(str, c.keys())) - before_keys)
+            detail.append(f"{name}: +{delta} compile(s)"
+                          + (f" (new keys: {', '.join(new_keys)})"
+                             if new_keys else ""))
+        self.compiles = total
+        if exc_type is not None:        # don't mask the original error
+            return
+        if total > self.budget:
+            raise RecompileBudgetError(
+                f"{self.what}: {total} compile(s), budget {self.budget} — "
+                + "; ".join(detail))
+
+
+@contextlib.contextmanager
+def sanitize(nan_check: bool = True, strict_dtypes: bool = True):
+    """Run a block under JAX's strict diagnostic modes, restoring the
+    previous configuration on exit.
+
+    ``nan_check`` enables ``jax_debug_nans`` (the first NaN-producing op
+    raises ``FloatingPointError`` with the offending primitive — note it
+    re-runs the computation op-by-op outside jit on failure, so only use
+    it while debugging, not in benchmarks).  ``strict_dtypes`` sets
+    ``jax_numpy_dtype_promotion="strict"``: mixed-precision arithmetic
+    without an explicit cast raises instead of silently promoting.
+    """
+    import jax
+    saved = {}
+    try:
+        if nan_check:
+            saved["jax_debug_nans"] = jax.config.jax_debug_nans
+            jax.config.update("jax_debug_nans", True)
+        if strict_dtypes:
+            saved["jax_numpy_dtype_promotion"] = \
+                jax.config.jax_numpy_dtype_promotion
+            jax.config.update("jax_numpy_dtype_promotion", "strict")
+        yield
+    finally:
+        for flag, value in saved.items():
+            jax.config.update(flag, value)
+
+
+def guard_compiles(budget: int = 0, caches=None,
+                   what: str = "guarded block") -> RecompileGuard:
+    """Convenience alias: ``with guard_compiles(0, what="resume"): ...``"""
+    return RecompileGuard(budget=budget, caches=caches, what=what)

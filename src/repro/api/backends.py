@@ -31,7 +31,7 @@ checkpoint/restore uniform across engines.
 from __future__ import annotations
 
 import time
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, ClassVar, Dict, FrozenSet, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -132,6 +132,21 @@ class Backend:
         stream = stream or {}
         return tuple(stream[p.name] if stream.get(p.name) is not None
                      else p.init() for p in stream_probes)
+
+    def caches(self) -> Tuple[ExecutableCache, ...]:
+        """Every :class:`ExecutableCache` this backend owns — the scope
+        the recompile guard (``repro.analysis.sanitize.RecompileGuard``)
+        watches when pinning chunked/resumed runs to zero compiles."""
+        return tuple(v for v in vars(self).values()
+                     if isinstance(v, ExecutableCache))
+
+    def is_warm_batch(self, n_trials: int, n_steps: int,
+                      probes: Sequence[Probe]) -> bool:
+        """True when a ``run_batch`` of this shape would hit a compiled
+        program — the Simulator arms a zero-budget recompile guard around
+        the timed run exactly when this holds (a warmed batch that still
+        compiles is a perf bug, not a warmup)."""
+        return False
 
     # optional capabilities -------------------------------------------------
     def supports_probe(self, probe: Probe) -> bool:
@@ -293,6 +308,10 @@ class FusedBackend(Backend):
             carries = self._batch_carries(stream_probes, None, n_trials)
             return fn.lower(*self._args(states), carries).compile()
         self._aot.get_or_build((n_trials, n_steps, probes), build)
+
+    def is_warm_batch(self, n_trials, n_steps, probes):
+        return (n_trials, n_steps, tuple(probes)) in self._aot \
+            or (n_steps, tuple(probes)) in self._batch_cache
 
     def run_batch(self, states, n_steps, probes, stream=None):
         """Vmapped multi-trial execution: one device program, all trials.
@@ -512,7 +531,8 @@ class ShardedBackend(Backend):
     """
 
     name = "sharded"
-    _SUPPORTED = {"pop_counts", "total_counts"}
+    _SUPPORTED: ClassVar[FrozenSet[str]] = frozenset(
+        {"pop_counts", "total_counts"})
     # StreamProbes are additionally supported: their update consumes the
     # all-gathered global spike vector (replicated on every device), so the
     # carry stays replicated and rides in the scan next to the state.

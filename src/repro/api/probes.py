@@ -24,6 +24,7 @@ composed in) the plastic state.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import (TYPE_CHECKING, Callable, NamedTuple, Optional, Sequence,
                     Union)
 
@@ -167,20 +168,22 @@ def spike_stats(ids, bin_steps: int = 20,
     # executable caches key on probe instances — two sessions sampling
     # the same ids must share one probe or every session recompiles
     key = (name, bin_steps, ids.tobytes())
-    cached = _STREAM_INTERNED.get(key)
-    if cached is not None:
-        return cached
-    dev_ids = jnp.asarray(ids)
+    with _INTERN_LOCK:
+        cached = _STREAM_INTERNED.get(key)
+        if cached is not None:
+            return cached
+        dev_ids = jnp.asarray(ids)
 
-    def update(carry, spiked):
-        return VS.update_carry(carry, spiked[dev_ids], bin_steps=bin_steps)
+        def update(carry, spiked):
+            return VS.update_carry(carry, spiked[dev_ids],
+                                   bin_steps=bin_steps)
 
-    probe = StreamProbe(name=name,
-                        init=lambda: VS.init_carry(ids.size),
-                        update=update,
-                        meta={"ids": ids, "bin_steps": bin_steps})
-    _STREAM_INTERNED[key] = probe
-    return probe
+        probe = StreamProbe(name=name,
+                            init=lambda: VS.init_carry(ids.size),
+                            update=update,
+                            meta={"ids": ids, "bin_steps": bin_steps})
+        _STREAM_INTERNED[key] = probe
+        return probe
 
 
 def weight_stats(name: str = "weight_stats") -> StreamProbe:
@@ -241,12 +244,17 @@ ProbeLike = Union[str, Probe, "StreamProbe"]
 # name -> interned Probe instance.  Probe equality is identity-based (the
 # reducer fn is a fresh closure per factory call), and backend compile
 # caches are keyed on Probe instances — resolving the same name twice must
-# yield the SAME object or every run would recompile.
+# yield the SAME object or every run would recompile.  Serve worker
+# threads resolve probes concurrently, so interning takes _INTERN_LOCK:
+# a check-then-insert race would hand two sessions different instances
+# of the "same" probe, silently doubling every compile downstream.
 _INTERNED: dict = {}
 
 # content-key -> StreamProbe, for parameterised stream-probe factories
 # (spike_stats): same sample + bin width -> same instance across sessions
 _STREAM_INTERNED: dict = {}
+
+_INTERN_LOCK = threading.Lock()
 
 
 def resolve(probes: Sequence[ProbeLike]) -> tuple:
@@ -257,9 +265,10 @@ def resolve(probes: Sequence[ProbeLike]) -> tuple:
             if p not in _BUILTIN:
                 raise ValueError(
                     f"unknown probe {p!r}; built-ins: {sorted(_BUILTIN)}")
-            if p not in _INTERNED:
-                _INTERNED[p] = _BUILTIN[p]()
-            p = _INTERNED[p]
+            with _INTERN_LOCK:
+                if p not in _INTERNED:
+                    _INTERNED[p] = _BUILTIN[p]()
+                p = _INTERNED[p]
         elif not isinstance(p, (Probe, StreamProbe)):
             raise TypeError(f"probe must be a name, Probe or StreamProbe, "
                             f"got {type(p)}")

@@ -23,6 +23,7 @@ transient is handled once per session (the paper's protocol: discard
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 import warnings
@@ -33,6 +34,7 @@ import numpy as np
 
 import jax.numpy as jnp
 
+from repro.analysis.sanitize import RecompileGuard
 from repro.api import probes as probes_mod
 from repro.api import results as results_mod
 from repro.api.backends import Backend, make_backend
@@ -338,9 +340,18 @@ class Simulator:
                                                   self._steps(t_pre), ())
             jax.block_until_ready(states)
         n_steps = self._steps(t_ms)
+        # a warmed batch program re-compiling is a perf bug, not a warmup:
+        # arm a zero-budget recompile guard exactly when warm
+        guard = (RecompileGuard(0, caches=self.backend.caches(),
+                                what=f"run_batch({len(seeds)} trials x "
+                                     f"{n_steps} steps) after warmup")
+                 if self.backend.is_warm_batch(len(seeds), n_steps,
+                                               tuple(pr))
+                 else contextlib.nullcontext())
         t0 = time.perf_counter()
-        states, data, trial_walls = self.backend.run_batch(states, n_steps,
-                                                           pr)
+        with guard:
+            states, data, trial_walls = self.backend.run_batch(
+                states, n_steps, pr)
         jax.block_until_ready((states, data))
         wall = time.perf_counter() - t0
 
@@ -399,11 +410,21 @@ class Simulator:
         chunks = []
         i = 0
         done = 0
+        seen_sizes: set = set()      # chunk lengths already compiled
         while done < total:
             n = min(per_chunk, total - done)
+            # chunks 2..N of a given length must hit the compile cache:
+            # the whole point of chunking is that only the first chunk
+            # (and a possibly-shorter last one) pays a trace+compile
+            guard = (RecompileGuard(0, caches=self.backend.caches(),
+                                    what=f"run_chunked chunk {i + 1} "
+                                         f"({n} steps, already compiled)")
+                     if n in seen_sizes else contextlib.nullcontext())
             try:
-                res = self.run(n * self.sim_config.dt, presim_ms=0,
-                               probes=probes)
+                with guard:
+                    res = self.run(n * self.sim_config.dt, presim_ms=0,
+                                   probes=probes)
+                seen_sizes.add(n)
             except Exception as e:
                 from repro.core.delivery import DeliveryOverflowError
                 if isinstance(e, DeliveryOverflowError) and chunks:

@@ -164,7 +164,7 @@ def restore(directory: str, target: Any, step: Optional[int] = None,
     _validate_manifest(path, target_leaves)
     data = np.load(os.path.join(path, "host_0.npz"))
     out = []
-    for kpath, leaf in flat:
+    for kpath, _ in flat:
         key = _SEP.join(str(p) for p in kpath)
         arr = data[key]
         out.append(arr)

@@ -1,11 +1,11 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
-"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+"""Multi-pod dry-run: lower + compile every (strategy x mesh) cell.
 
-For each cell the appropriate entry point is lowered with ShapeDtypeStruct
-inputs (nothing is allocated), compiled against the production mesh, and the
-compiled artifact is mined for:
+For each cell the full-scale sharded microcircuit step is lowered with
+ShapeDtypeStruct inputs (nothing is allocated), compiled against the
+production mesh, and the compiled artifact is mined for:
   * memory_analysis()  — per-device argument/output/temp bytes (fits-HBM proof)
   * cost_analysis()    — per-device HLO FLOPs and bytes accessed
   * the post-GSPMD HLO — per-collective byte counts (all-gather, all-reduce,
@@ -13,13 +13,13 @@ compiled artifact is mined for:
 Results land in artifacts/dryrun/<arch>__<shape>__<mesh>.json; the roofline
 benchmark (benchmarks/roofline.py) consumes them.
 
-Shape kinds: train_* lowers the full train_step (grad + optimizer update),
-prefill_* lowers the forward cache-building pass, decode_*/long_* lower
-serve_step (one token against a seq_len KV cache).
+Shapes are the delivery strategies: ``event`` lowers the NEST ownership
+scheme under shard_map (explicit spike all-gather), ``dense`` the delay-
+binned W[D, N, N] under pjit (2-D sharded weight matmul).
 
 Usage:
-  PYTHONPATH=src python -m repro.launch.dryrun --arch minitron-4b \
-      --shape train_4k --mesh pod1
+  PYTHONPATH=src python -m repro.launch.dryrun --arch microcircuit \
+      --shape event --mesh pod1
   PYTHONPATH=src python -m repro.launch.dryrun --all
 """
 
@@ -30,16 +30,10 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import ARCH_IDS, SHAPES, cells, get_config
+from repro.configs import ARCH_IDS
 from repro.launch.mesh import make_production_mesh
-from repro.models.model import build
-from repro.sharding import ctx as CTX
-from repro.sharding import rules as R
-from repro.train import optim as O
-from repro.train.train_step import TrainHparams, TrainState, make_train_step
 
 ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                        "artifacts", "dryrun")
@@ -96,97 +90,6 @@ def wire_bytes(stats: dict) -> float:
 # Cell lowering
 # ---------------------------------------------------------------------------
 
-def _abstract_train_state(model, abs_params, hp):
-    lr = O.make_schedule(model.cfg.lr_schedule, hp.base_lr, hp.warmup,
-                         hp.total_steps)
-    opt = O.make_optimizer(model.cfg.optimizer, lr)
-    abs_opt = jax.eval_shape(opt.init, abs_params)
-    step = jax.ShapeDtypeStruct((), jnp.int32)
-    return TrainState(abs_params, abs_opt, step, None), opt
-
-
-def _opt_state_sharding(model, abs_opt, axes, mesh):
-    """Optimizer-state shardings derived from the param logical axes."""
-    name = model.cfg.optimizer
-    if name == "adamw":
-        sh = R.param_sharding(axes, abs_opt["m"], mesh)
-        return {"m": sh, "v": sh}
-
-    # adafactor: factored stats drop one dim of the param axes
-    def one(ax, leaf_state):
-        out = {}
-        for k, s in leaf_state.items():
-            if k == "vr":
-                a = tuple(ax[:-1])
-            elif k == "vc":
-                a = tuple(ax[:-2]) + tuple(ax[-1:])
-            else:
-                a = tuple(ax)
-            out[k] = jax.sharding.NamedSharding(
-                mesh, R.resolve(a, s.shape, mesh, R.PARAM_RULES))
-        return out
-
-    is_ax = lambda x: isinstance(x, tuple) and all(
-        isinstance(e, (str, type(None))) for e in x)
-    return {"s": jax.tree.map(one, axes, abs_opt["s"], is_leaf=is_ax)}
-
-
-def lower_cell(arch: str, shape_name: str, multi_pod: bool):
-    """Returns (lowered, meta) for one dry-run cell."""
-    mesh = make_production_mesh(multi_pod=multi_pod)
-    cfg = get_config(arch)
-    model = build(cfg)
-    shape = SHAPES[shape_name]
-    axes = model.logical_axes()
-    abs_params = model.abstract_params()
-    p_shard = R.param_sharding(axes, abs_params, mesh)
-    batch_specs = model.input_specs(shape)
-    b_shard = R.batch_sharding(batch_specs, mesh)
-    meta = {"params": model.param_count(),
-            "active_params": active_param_count(model)}
-
-    # Gradient-accumulation factors for the biggest trains: activation
-    # footprint scales 1/microbatches at the cost of one extra grad buffer.
-    micro = {"kimi-k2-1t-a32b": 4, "jamba-v0.1-52b": 16,
-             "deepseek-moe-16b": 8, "llama-3.2-vision-90b": 8,
-             "xlstm-1.3b": 4, "qwen3-32b": 2, "minicpm-2b": 2,
-             "phi3-medium-14b": 2}.get(arch, 1)
-
-    with CTX.use_mesh(mesh):
-        if shape.kind == "train":
-            hp = TrainHparams(microbatches=micro)
-            abs_state, opt = _abstract_train_state(model, abs_params, hp)
-            opt_shard = _opt_state_sharding(model, abs_state.opt_state,
-                                            axes, mesh)
-            s_shard = TrainState(p_shard, opt_shard, R.replicated(mesh), None)
-            step_fn = make_train_step(model, opt, hp)
-            jf = jax.jit(step_fn, in_shardings=(s_shard, b_shard),
-                         out_shardings=(s_shard, None),
-                         donate_argnums=(0,))
-            lowered = jf.lower(abs_state, batch_specs)
-        elif shape.kind == "prefill":
-            # sequence-chunked prefill bounds activation memory for the
-            # biggest model (bit-exact vs full prefill; see tests)
-            # (prefill_chunked is available but trades 12 GiB for 2.6x
-            # collectives on the 1T config — see EXPERIMENTS.md §Perf)
-            jf = jax.jit(model.prefill, in_shardings=(p_shard, b_shard))
-            lowered = jf.lower(abs_params, batch_specs)
-        else:  # decode
-            abs_caches = model.init_caches(shape.global_batch, shape.seq_len,
-                                           abstract=True)
-            c_shard = R.cache_sharding(abs_caches, mesh)
-            tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
-            idx = jax.ShapeDtypeStruct((), jnp.int32)
-            jf = jax.jit(model.decode,
-                         in_shardings=(p_shard, c_shard,
-                                       R.batch_sharding(tok, mesh),
-                                       R.replicated(mesh)),
-                         out_shardings=(None, c_shard),
-                         donate_argnums=(1,))
-            lowered = jf.lower(abs_params, abs_caches, tok, idx)
-    return lowered, meta, mesh
-
-
 def lower_microcircuit(strategy: str, multi_pod: bool):
     """Dry-run the paper's model itself: full-scale microcircuit, sharded.
 
@@ -236,24 +139,6 @@ def lower_microcircuit(strategy: str, multi_pod: bool):
     return lowered, meta, mesh
 
 
-def active_param_count(model) -> int:
-    """Params touched per token: total minus unrouted experts."""
-    cfg = model.cfg
-    total = model.param_count()
-    if not cfg.n_experts:
-        return total
-    import numpy as np
-    axes = model.logical_axes()
-    abs_p = model.abstract_params()
-    routed = sum(
-        int(np.prod(l.shape))
-        for l, a in zip(jax.tree.leaves(abs_p), jax.tree.leaves(
-            jax.tree.map(lambda x: ",".join(str(e) for e in x), axes,
-                         is_leaf=lambda x: isinstance(x, tuple))))
-        if "experts" in a)
-    return total - routed + routed * cfg.top_k // cfg.n_experts
-
-
 def run_cell(arch: str, shape_name: str, mesh_name: str,
              out_dir: str = ART_DIR, force: bool = False) -> dict:
     os.makedirs(out_dir, exist_ok=True)
@@ -264,11 +149,11 @@ def run_cell(arch: str, shape_name: str, mesh_name: str,
             return json.load(f)
 
     multi_pod = mesh_name == "pod2"
+    if arch != "microcircuit":
+        raise KeyError(f"unknown arch {arch!r}; the LM dry-run cells were "
+                       f"excised (see CHANGES.md) — known: {list(ARCH_IDS)}")
     t0 = time.time()
-    if arch == "microcircuit":
-        lowered, meta, mesh = lower_microcircuit(shape_name, multi_pod)
-    else:
-        lowered, meta, mesh = lower_cell(arch, shape_name, multi_pod)
+    lowered, meta, mesh = lower_microcircuit(shape_name, multi_pod)
     t_lower = time.time() - t0
     t0 = time.time()
     compiled = lowered.compile()
@@ -320,16 +205,11 @@ def main():
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
 
-    archs = ([args.arch] if args.arch
-             else list(ARCH_IDS) + ["microcircuit"])
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
     meshes = [args.mesh] if args.mesh else ["pod1", "pod2"]
     n_ok = n_fail = 0
     for arch in archs:
-        if arch == "microcircuit":
-            shapes = [args.shape] if args.shape else ["event", "dense"]
-        else:
-            shapes = ([args.shape] if args.shape
-                      else [s.name for s in cells(arch)])
+        shapes = [args.shape] if args.shape else ["event", "dense"]
         for shape in shapes:
             for mesh_name in meshes:
                 key = f"{arch}__{shape}__{mesh_name}"

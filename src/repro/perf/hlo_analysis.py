@@ -256,3 +256,67 @@ def analyze_hlo(hlo: str) -> dict:
         "collective_top_tags": top_tags,
         "cpu_bf16_promotion_bytes": bf16_promo,
     }
+
+
+# ---------------------------------------------------------------------------
+# Structural op census (the repro.analysis HLO contract checks)
+# ---------------------------------------------------------------------------
+
+_CUSTOM_TARGET_RE = re.compile(r'custom_call_target="([^"]*)"')
+
+
+def op_census(hlo: str) -> dict:
+    """Structural facts of an HLO module, for contract assertions.
+
+    Unlike :func:`analyze_hlo` (a trip-count-weighted *cost* model) this
+    is a plain census of what the module is made of:
+
+    * ``entry_whiles`` — while ops in the ENTRY computation.  A fused
+      step that lowered correctly has exactly one (the ``lax.scan``);
+      more means the step body escaped fusion or a second loop crept in,
+    * ``custom_call_targets`` — target -> count over the whole module.
+      Host callbacks (``xla_python_*_callback``-style targets) must not
+      appear in the hot program: each one is a device->host sync per
+      invocation,
+    * ``converts`` — dtype-conversion ops module-wide (fusion-internal
+      included).  A bounded count pins the mixed-precision surface: a
+      jump means something started promoting per step,
+    * ``f64_tensors`` — instructions whose result type mentions ``f64``
+      (the dtype-discipline contract at the HLO level, where nothing can
+      hide behind an allowlist),
+    * ``ops`` — total op histogram, for reports.
+    """
+    comps = parse_module(hlo)
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_RE.match(line)
+            if m:
+                entry = m.group(1)
+    if entry is None and comps:
+        entry = list(comps)[-1]
+
+    ops: Dict[str, int] = defaultdict(int)
+    custom_targets: Dict[str, int] = defaultdict(int)
+    converts = 0
+    f64 = 0
+    for instrs in comps.values():
+        for ins in instrs:
+            ops[ins.op] += 1
+            if ins.op == "convert":
+                converts += 1
+            if "f64[" in ins.type_str:
+                f64 += 1
+            if ins.op == "custom-call":
+                mt = _CUSTOM_TARGET_RE.search(ins.line)
+                custom_targets[mt.group(1) if mt else "<unknown>"] += 1
+    entry_whiles = sum(1 for ins in comps.get(entry, ())
+                       if ins.op == "while")
+    return {
+        "entry": entry,
+        "entry_whiles": entry_whiles,
+        "custom_call_targets": dict(sorted(custom_targets.items())),
+        "converts": converts,
+        "f64_tensors": f64,
+        "ops": dict(sorted(ops.items())),
+    }

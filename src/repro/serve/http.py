@@ -140,11 +140,11 @@ class _Handler(BaseHTTPRequestHandler):
     def do_POST(self):                      # noqa: N802
         try:
             body = self._body()
-        except (ValueError, json.JSONDecodeError) as e:
+        except ValueError as e:     # json.JSONDecodeError is a ValueError
             return self._error(400, f"bad JSON body: {e}")
         try:
             return self._route_post(body)
-        except (KeyError,) as e:
+        except KeyError as e:
             return self._error(404, str(e))
         except (ValueError, TypeError, RuntimeError) as e:
             return self._error(400, f"{type(e).__name__}: {e}")

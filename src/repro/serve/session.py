@@ -176,11 +176,19 @@ class Session:
         return path
 
     def resume(self) -> None:
-        """Re-materialise a suspended session from its checkpoint."""
+        """Re-materialise a suspended session from its checkpoint.
+
+        Resume is a pure state re-materialisation against the shared
+        backend — its compiled executables stayed warm through the
+        suspension, so resuming must not trigger a single new compile
+        (asserted here with a zero-budget recompile guard)."""
         self._check_open()
         if self.status != "suspended":
             return
-        self.sim.resume(self.ckpt_dir)
+        from repro.analysis.sanitize import RecompileGuard
+        with RecompileGuard(0, caches=self.sim.backend.caches(),
+                            what=f"resume of session {self.id!r}"):
+            self.sim.resume(self.ckpt_dir)
         self.status = "running"
 
     def close(self) -> None:

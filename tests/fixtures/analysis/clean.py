@@ -1,0 +1,29 @@
+"""Clean fixture: the hot-path shapes written correctly — zero findings.
+
+Same patterns as the violation fixtures, expressed with the idioms the
+lint rules steer towards (jnp.where / lax.select, static introspection,
+lock-guarded shared state, f32).
+"""
+import threading
+
+import jax.numpy as jnp
+from jax import lax
+
+_CACHE = {}
+_LOCK = threading.Lock()
+
+
+def hot_step(state, t):
+    gain = jnp.exp(state)
+    state = jnp.where(gain > 0.5, state + 1.0, state)
+    state = lax.select(t > 0, state, gain)
+    if state.shape[0] > 4:              # static under tracing
+        state = state * 1.0
+    if state is None:                   # identity test is host-side
+        return gain
+    return state.astype(jnp.float32)
+
+
+def remember(key, value):
+    with _LOCK:
+        _CACHE[key] = value

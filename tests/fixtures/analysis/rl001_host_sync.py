@@ -1,0 +1,29 @@
+"""RL001 fixture: host-sync operations in a scan-reachable function.
+
+The test suite lints this file with a config whose roots match
+``hot_step`` / ``hot_caller`` and asserts one finding per line carrying
+an ``RL001`` marker comment (rule id + line are both checked).
+"""
+import numpy as np
+
+
+def hot_step(state, t):
+    rate = float(state)                 # RL001: float() on traced
+    print("step", t)                    # RL001: print()
+    host = np.asarray(state)            # RL001: np.asarray() on traced
+    peak = state.item()                 # RL001: .item()
+    return rate, host, peak
+
+
+def helper_called_from_hot(carry):
+    return carry.item()                 # RL001: hot via the call graph
+
+
+def hot_caller(state):
+    return helper_called_from_hot(state)
+
+
+def cold_helper(config):
+    # NOT reachable from any root: host syncs here are legitimate
+    print("loaded", config)
+    return float(np.asarray([1.0])[0])

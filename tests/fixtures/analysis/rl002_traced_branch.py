@@ -1,0 +1,19 @@
+"""RL002 fixture: Python control flow on traced values.
+
+Linted with roots matching ``hot_branch``; the tests assert one finding
+per ``RL002`` marker line.
+"""
+import jax.numpy as jnp
+
+
+def hot_branch(state, t):
+    gain = jnp.exp(state)               # taint: jnp call result is traced
+    if gain > 0.5:                      # RL002: `if` on traced value
+        state = state + 1.0
+    while t > 0:                        # RL002: `while` on traced value
+        t = t - 1
+    if state.shape[0] > 4:              # static introspection: no finding
+        state = state * 1.0
+    if state is None:                   # identity test: no finding
+        return gain
+    return state

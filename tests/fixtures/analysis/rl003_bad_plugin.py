@@ -1,0 +1,48 @@
+"""RL003 fixture: a registered plugin drifting from its protocol.
+
+Defines a minimal local ``DeliveryStrategy`` (RL003 resolves protocol
+bases by simple name, so fixtures carry their own) plus a registered
+subclass with a renamed positional parameter and a missing required
+method.  The ``StreamProbe`` stub exercises the construction checks.
+One finding per ``RL003`` marker line.
+"""
+
+
+def register(cls):
+    return cls
+
+
+class DeliveryStrategy:
+    def prepare(self, c, tables):
+        raise NotImplementedError           # required (bare raise)
+
+    def deliver(self, ring, spiked, t):
+        raise NotImplementedError           # required (bare raise)
+
+    def localize(self, tables):
+        raise NotImplementedError("optional capability: no shard form")
+
+
+@register
+class BadDelivery(DeliveryStrategy):        # RL003: required deliver missing
+    def prepare(self, c, extra_tables):     # RL003: positional-name mismatch
+        return extra_tables
+
+    def localize(self, tables):             # optional override: fine
+        return tables
+
+
+class StreamProbe:
+    """Local stand-in; RL003 matches constructions by simple name."""
+
+    def __init__(self, **kw):
+        self.kw = kw
+
+
+def bad_update(carry):                      # RL003: update takes 2 args
+    return carry
+
+
+def make_probe():
+    return StreamProbe(name="x", init=lambda: 0, update=bad_update,
+                       needs="weird")       # RL003: bad needs value

@@ -1,0 +1,14 @@
+"""RL004 fixture: double precision in device-code scope.
+
+Linted with ``dtype_scopes`` covering this directory; one finding per
+``RL004`` marker line.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+KERNEL_TAPS = np.zeros(4, dtype=np.float64)     # RL004: np.float64
+ACC_DTYPE = jnp.float64                         # RL004: jnp.float64
+
+
+def device_accumulate(x):
+    return x.astype(ACC_DTYPE).sum()

@@ -1,0 +1,250 @@
+"""repro.analysis: lint rule fixtures, baseline lifecycle, sanitizers.
+
+The fixture files under ``tests/fixtures/analysis/`` each violate one
+rule; a ``# RL00x:`` marker comment sits on every line the linter must
+flag, so the tests assert *rule id and line number* without hardcoding
+line counts into two places.  ``clean.py`` writes the same shapes
+correctly and must produce zero findings.
+
+The RecompileGuard tests pin the tentpole acceptance: ``run_chunked``
+chunks 2..N, a post-warmup ``run`` and suspend/resume are compile-free.
+"""
+import dataclasses
+import datetime
+import re
+
+import numpy as np
+import pytest
+
+from repro.analysis.lint import LintConfig, lint_paths
+from repro.analysis.report import (BaselineEntry, Finding,
+                                   baseline_from_findings, diff_findings)
+from repro.analysis.sanitize import (RecompileBudgetError, RecompileGuard,
+                                     sanitize)
+from repro.serve.compile_cache import ExecutableCache
+
+FIXTURES = "tests/fixtures/analysis"
+
+# roots/scopes aimed at the fixture directory instead of src/repro
+FIXTURE_CONFIG = LintConfig(
+    roots=("rl001_host_sync.hot_step", "rl001_host_sync.hot_caller",
+           "rl002_traced_branch.hot_branch", "clean.hot_step"),
+    dtype_scopes=("fixtures/analysis/",),
+    shared_state_scopes=("fixtures/analysis/",),
+)
+
+
+def marked_lines(path: str, rule: str) -> set:
+    """Line numbers carrying an ``# <rule>:`` marker comment."""
+    pat = re.compile(rf"#\s*{rule}:")
+    with open(path) as f:
+        return {i for i, line in enumerate(f, 1) if pat.search(line)}
+
+
+def lint_fixture(name: str):
+    path = f"{FIXTURES}/{name}.py"
+    return path, lint_paths([path], FIXTURE_CONFIG)
+
+
+@pytest.mark.parametrize("fixture,rule,expected", [
+    ("rl001_host_sync", "RL001", 5),
+    ("rl002_traced_branch", "RL002", 2),
+    ("rl003_bad_plugin", "RL003", 4),
+    ("rl004_float64", "RL004", 2),
+    ("rl005_unlocked", "RL005", 2),
+])
+def test_rule_fires_on_marked_lines(fixture, rule, expected):
+    path, findings = lint_fixture(fixture)
+    assert {f.rule for f in findings} == {rule}
+    lines = {f.line for f in findings}
+    assert lines == marked_lines(path, rule)
+    assert len(findings) == expected
+
+
+def test_clean_fixture_has_zero_findings():
+    _, findings = lint_fixture("clean")
+    assert findings == []
+
+
+def test_rl001_unreachable_function_not_flagged():
+    """Host syncs outside the hot call graph are legitimate."""
+    _, findings = lint_fixture("rl001_host_sync")
+    assert all("cold_helper" not in f.symbol for f in findings)
+
+
+def test_rl003_reports_symbols():
+    _, findings = lint_fixture("rl003_bad_plugin")
+    symbols = {f.symbol for f in findings}
+    assert "rl003_bad_plugin.BadDelivery" in symbols          # missing method
+    assert "rl003_bad_plugin.BadDelivery.prepare" in symbols  # param drift
+
+
+# ---------------------------------------------------------------------------
+# Baseline lifecycle: suppress, count budget, expiry, staleness
+# ---------------------------------------------------------------------------
+
+F = Finding("RL004", "src/x.py", 10, "x.fn", "float64 in device code")
+TODAY = datetime.date(2026, 8, 1)
+
+
+def entry(**kw):
+    base = dict(rule=F.rule, path=F.path, symbol=F.symbol, message=F.message)
+    base.update(kw)
+    return BaselineEntry(**base)
+
+
+def test_baseline_suppresses_matching_finding():
+    diff = diff_findings([F], [entry()], TODAY)
+    assert diff.ok
+    assert diff.grandfathered == [F] and not diff.new and not diff.stale
+
+
+def test_baseline_match_ignores_line_drift():
+    moved = dataclasses.replace(F, line=99)
+    diff = diff_findings([moved], [entry()], TODAY)
+    assert diff.ok and diff.grandfathered == [moved]
+
+
+def test_baseline_count_budget_is_exact():
+    diff = diff_findings([F, F], [entry(count=1)], TODAY)
+    assert not diff.ok
+    assert len(diff.grandfathered) == 1 and len(diff.new) == 1
+
+
+def test_expired_entry_stops_suppressing():
+    diff = diff_findings([F], [entry(expires="2026-07-31")], TODAY)
+    assert not diff.ok
+    assert diff.expired == [F] and not diff.grandfathered
+
+
+def test_unexpired_entry_still_suppresses():
+    diff = diff_findings([F], [entry(expires="2026-08-01")], TODAY)
+    assert diff.ok and diff.grandfathered == [F]
+
+
+def test_stale_entry_reported_but_passes():
+    other = entry(message="a finding that was fixed")
+    diff = diff_findings([F], [entry(), other], TODAY)
+    assert diff.ok
+    assert diff.stale == [other]
+
+
+def test_new_finding_fails():
+    diff = diff_findings([F], [], TODAY)
+    assert not diff.ok and diff.new == [F]
+
+
+def test_baseline_roundtrip_from_findings():
+    doc = baseline_from_findings([F, F], reason="why")
+    assert doc["schema"] == "repro.analysis_baseline/v1"
+    (e,) = doc["entries"]
+    assert e["count"] == 2 and e["reason"] == "why"
+    diff = diff_findings([F, F], [BaselineEntry(**doc["entries"][0])], TODAY)
+    assert diff.ok and len(diff.grandfathered) == 2
+
+
+# ---------------------------------------------------------------------------
+# Sanitizers: RecompileGuard + sanitize()
+# ---------------------------------------------------------------------------
+
+def test_guard_budget_zero_fails_on_compile():
+    cache = ExecutableCache("guard-test-a")
+    with pytest.raises(RecompileBudgetError, match="guard-test-a"):
+        with RecompileGuard(0, caches=[cache], what="block"):
+            cache.get_or_build(("k", 1), lambda: object())
+
+
+def test_guard_budget_one_allows_one_compile():
+    cache = ExecutableCache("guard-test-b")
+    with RecompileGuard(1, caches=[cache]) as g:
+        cache.get_or_build(("k", 1), lambda: object())
+    assert g.compiles == 1
+
+
+def test_guard_ignores_cache_hits():
+    cache = ExecutableCache("guard-test-c")
+    cache.get_or_build("k", lambda: object())       # warm outside the guard
+    with RecompileGuard(0, caches=[cache]) as g:
+        cache.get_or_build("k", lambda: object())   # hit
+    assert g.compiles == 0
+
+
+def test_guard_does_not_mask_inner_exception():
+    cache = ExecutableCache("guard-test-d")
+    with pytest.raises(ValueError, match="inner"):
+        with RecompileGuard(0, caches=[cache]):
+            cache.get_or_build("k", lambda: object())
+            raise ValueError("inner")
+
+
+def test_sanitize_sets_and_restores_flags():
+    import jax
+    nans_before = jax.config.jax_debug_nans
+    promo_before = jax.config.jax_numpy_dtype_promotion
+    with sanitize():
+        assert jax.config.jax_debug_nans is True
+        assert jax.config.jax_numpy_dtype_promotion == "strict"
+    assert jax.config.jax_debug_nans == nans_before
+    assert jax.config.jax_numpy_dtype_promotion == promo_before
+
+
+# ---------------------------------------------------------------------------
+# The tentpole acceptance: post-warmup runs are compile-free
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def smoke_sim_parts():
+    from repro.configs.microcircuit import SMOKE
+    from repro.core import build_connectome
+    cfg = dataclasses.replace(SMOKE, t_presim=0.0)
+    c = build_connectome(n_scaling=cfg.n_scaling, k_scaling=cfg.k_scaling,
+                        seed=cfg.seed)
+    return cfg, c
+
+
+def _total_misses(sim) -> int:
+    return sum(cache.misses for cache in sim.backend.caches())
+
+
+def test_chunked_run_and_resume_are_compile_free(smoke_sim_parts, tmp_path):
+    from repro.api import Simulator
+    cfg, c = smoke_sim_parts
+    sim = Simulator(cfg, connectome=c)
+    first = sim.run(10.0)                      # warmup: compiles here
+    warm = _total_misses(sim)
+    assert warm >= 1
+
+    res = sim.run_chunked(30.0, 10.0)          # 3 chunks, same step count
+    assert _total_misses(sim) == warm          # chunks reuse the executable
+
+    ckpt = str(tmp_path / "ckpt")
+    sim.suspend(ckpt)
+    sim.resume(ckpt)
+    cont = sim.run(10.0)
+    assert _total_misses(sim) == warm          # resume + rerun: no compiles
+    assert cont["pop_counts"].shape == first["pop_counts"].shape
+    assert res["pop_counts"].shape[0] == 3 * first["pop_counts"].shape[0]
+
+
+def test_chunked_guard_trips_on_forced_recompile(smoke_sim_parts):
+    """A cache miss inside a guarded chunk raises at the call site."""
+    from repro.api import Simulator
+    cfg, c = smoke_sim_parts
+    sim = Simulator(cfg, connectome=c)
+    sim.run(10.0)
+    caches = sim.backend.caches()
+    assert caches                              # the backend exposes its caches
+    with pytest.raises(RecompileBudgetError):
+        with RecompileGuard(0, caches=caches, what="forced"):
+            sim.run(20.0)                      # different n_steps: must compile
+
+
+def test_run_results_unchanged_under_guard(smoke_sim_parts):
+    """Guarded chunked runs produce the same counts as one straight run."""
+    from repro.api import Simulator
+    cfg, c = smoke_sim_parts
+    ref = Simulator(cfg, connectome=c).run(20.0)
+    sim = Simulator(cfg, connectome=c)
+    chunked = sim.run_chunked(20.0, 10.0)
+    np.testing.assert_array_equal(np.asarray(ref["pop_counts"]),
+                                  np.asarray(chunked["pop_counts"]))

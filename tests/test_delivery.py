@@ -142,7 +142,7 @@ def test_ell_kernel_matches_ref_oracle(tiny_c):
     rng = np.random.default_rng(3)
     ring = jnp.asarray(rng.normal(size=(c.d_max_bins, 2, c.n_total + 1))
                        .astype(np.float32))
-    for seed, t in ((0, 0), (1, 17), (2, 45)):
+    for _, t in ((0, 0), (1, 17), (2, 45)):
         spiked = jnp.asarray(rng.random(c.n_total) < 30 / c.n_total)
         tt = jnp.asarray(t, jnp.int32)
         got, ovf_g = kops.ell_deliver(ring, tables, spiked, tt, c.n_exc, 64)

@@ -70,7 +70,7 @@ def test_threshold_reset_and_refractoriness():
     assert float(state.V[0]) == p.V_reset
     assert int(state.refrac[0]) == prop.ref_steps
     # during refractoriness: V clamped, no spikes, counter decrements
-    for i in range(prop.ref_steps):
+    for _ in range(prop.ref_steps):
         state, spiked = lif_step(state, prop, zeros, zeros, zeros)
         assert not bool(spiked[0])
         assert float(state.V[0]) == p.V_reset

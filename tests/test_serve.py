@@ -13,6 +13,7 @@ The acceptance pins of PR 6:
 import dataclasses
 import json
 import os
+import urllib.error
 
 import numpy as np
 import pytest
@@ -318,7 +319,7 @@ def test_http_lifecycle_and_streaming():
         client.destroy(sid)
         assert client.sessions() == []
 
-        with pytest.raises(Exception):        # urllib raises HTTPError 404
+        with pytest.raises(urllib.error.HTTPError):        # 404
             client.suspend("nope")
         client.shutdown()
     finally:

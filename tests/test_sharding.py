@@ -90,19 +90,6 @@ else:
         _check_resolver_properties(list(dims), list(names))
 
 
-def test_param_sharding_tree(key):
-    from repro.configs import get_smoke_config
-    from repro.models.model import build
-    mesh = make_host_mesh()
-    m = build(get_smoke_config("qwen3-32b"))
-    sh = R.param_sharding(m.logical_axes(), m.abstract_params(), mesh)
-    leaves = jax.tree.leaves(sh, is_leaf=lambda x: hasattr(x, "spec"))
-    assert all(hasattr(s, "spec") for s in leaves)
-    # same structure as params
-    assert (jax.tree.structure(sh, is_leaf=lambda x: hasattr(x, "spec"))
-            == jax.tree.structure(m.abstract_params()))
-
-
 def test_cache_sharding_rules():
     mesh = MESH1
     cache = {"off0": {
