@@ -16,10 +16,13 @@ import platform
 import time
 from typing import Dict, List, Optional
 
-BENCH_SCHEMA = "repro.bench_rtf/v2"
+BENCH_SCHEMA = "repro.bench_rtf/v3"
 # v1 ledgers (no per-trial fields) load and compare fine; v2 adds
-# n_trials / rtf_mean / rtf_std to multi-trial entries
-_ACCEPTED_SCHEMAS = ("repro.bench_rtf/v1", BENCH_SCHEMA)
+# n_trials / rtf_mean / rtf_std to multi-trial entries; v3 adds the
+# optional per-entry "kernels" (resolved KernelPolicy) and "roofline"
+# (per-step FLOPs/bytes + achieved-vs-peak, benchmarks/roofline.py)
+_ACCEPTED_SCHEMAS = ("repro.bench_rtf/v1", "repro.bench_rtf/v2",
+                     BENCH_SCHEMA)
 
 
 def time_sim(sim, t_model_ms: float, presim_ms: float = 0.0):

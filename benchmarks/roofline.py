@@ -1,6 +1,9 @@
-"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+"""Roofline analysis: dry-run artifacts + the live step program.
 
-Three terms per (arch x shape x mesh) cell, in seconds per step:
+Two modes share the v5e constants:
+
+**Dry-run cells** (default; EXPERIMENTS.md §Roofline) — three terms per
+(arch x shape x mesh) cell, in seconds per step:
 
   compute    = HLO_FLOPs_per_device / 197e12          (bf16 peak, v5e)
   memory     = HLO_bytes_per_device / 819e9            (HBM bandwidth)
@@ -9,6 +12,17 @@ Three terms per (arch x shape x mesh) cell, in seconds per step:
 plus MODEL_FLOPS = 6·N_active·tokens (train) or 2·N_active·tokens
 (prefill/decode) and the usefulness ratio MODEL_FLOPS / total_HLO_FLOPs
 (catches remat/redundancy waste).  The dominant term is the hillclimb target.
+
+**Live step** (``--live``, and ``table1_rtf.py --roofline``) — the
+*actual* compiled step program of a built :class:`Simulator` is lowered
+(``repro.analysis.hlo_contract.fused_step_hlo``), its per-step FLOPs and
+HBM bytes extracted (``repro.perf.hlo_analysis.analyze_hlo``), and —
+when a measured per-step wall time is folded in — converted to achieved
+FLOP/s and bytes/s against the v5e peaks.  On a CPU host the achieved
+percentages use the v5e denominators unchanged: they are projection
+ratios ("what fraction of a v5e roofline this step program would need"),
+not a claim about the CPU's own roofline — the honest number is the
+bytes/FLOPs-per-step pair, which is machine-independent.
 """
 from __future__ import annotations
 
@@ -127,7 +141,126 @@ def markdown_table(rows: List[dict]) -> str:
     return "\n".join(lines)
 
 
-def main():
+# ---------------------------------------------------------------------------
+# Live step-program roofline
+# ---------------------------------------------------------------------------
+
+def live_roofline(sim, *, n_steps: int = 100) -> Dict:
+    """HLO-derived per-step cost of a built Simulator's step program.
+
+    Lowers the backend's scan runner for ``n_steps`` (AOT — nothing runs
+    on the device), divides the module totals by ``n_steps``, and places
+    the step on the v5e roofline.  FLOPs = dot + elementwise terms (a
+    spiking step is dot-free, so the elementwise term carries it).
+
+    The byte count is a *ceiling*: every top-level op is charged a full
+    HBM round trip, which overstates traffic wherever buffers stay in
+    cache/VMEM.  Under ``kernels="fused"`` off-TPU the overstatement is
+    large — interpret mode emulates the Pallas grid as an XLA loop that
+    re-touches whole buffers per grid step — so compare fused-vs-split
+    bytes only between on-TPU lowerings.
+    """
+    from repro.analysis.hlo_contract import fused_step_hlo
+    from repro.perf.hlo_analysis import analyze_hlo
+
+    import jax
+
+    hlo = fused_step_hlo(sim, n_steps=n_steps)
+    a = analyze_hlo(hlo)
+    flops = (a["flops_per_device"]
+             + a["elementwise_flops_per_device"]) / n_steps
+    ceil_b = a["hbm_bytes_per_device"] / n_steps
+    # compulsory floor: the scan carry (membrane state + delay ring) is
+    # read and written once per step no matter how well XLA fuses
+    state = sim.state if sim.state is not None \
+        else sim.backend.init(jax.random.PRNGKey(0))
+    floor_b = 2.0 * sum(x.size * x.dtype.itemsize
+                        for x in jax.tree_util.tree_leaves(state)
+                        if hasattr(x, "dtype"))
+    compute_s = flops / PEAK_FLOPS
+    mem_floor_s = floor_b / HBM_BW
+    mem_ceil_s = ceil_b / HBM_BW
+    dt_s = float(sim.sim_config.dt) * 1e-3
+    pol = sim.sim_config.kernels
+    return {
+        "n_steps_analyzed": n_steps,
+        "flops_per_step": flops,
+        "hbm_bytes_per_step_floor": floor_b,
+        "hbm_bytes_per_step_ceiling": ceil_b,
+        "arithmetic_intensity_floor": (flops / floor_b) if floor_b else 0.0,
+        "compute_s_v5e": compute_s,
+        "memory_floor_s_v5e": mem_floor_s,
+        "memory_ceiling_s_v5e": mem_ceil_s,
+        "dominant": "memory" if mem_floor_s >= compute_s else "compute",
+        "step_bound_s_v5e": (max(compute_s, mem_floor_s),
+                             max(compute_s, mem_ceil_s)),
+        "rtf_bound_v5e": (max(compute_s, mem_floor_s) / dt_s,
+                          max(compute_s, mem_ceil_s) / dt_s),
+        "kernels": None if pol is None else pol.describe(),
+    }
+
+
+def with_achieved(roof: Dict, step_s: float) -> Dict:
+    """Fold a measured per-step wall time into achieved-vs-peak rates.
+
+    Achieved bandwidth uses the compulsory *floor* bytes — sustained
+    traffic the step cannot avoid — so the percentage stays meaningful on
+    hosts where the ceiling model overstates (see ``live_roofline``).
+    """
+    return {
+        **roof,
+        "measured_step_s": step_s,
+        "achieved_flops_per_s": roof["flops_per_step"] / step_s,
+        "achieved_hbm_bytes_per_s":
+            roof["hbm_bytes_per_step_floor"] / step_s,
+        "pct_peak_flops": 100.0 * roof["flops_per_step"] / step_s
+                          / PEAK_FLOPS,
+        "pct_peak_hbm": 100.0 * roof["hbm_bytes_per_step_floor"] / step_s
+                        / HBM_BW,
+    }
+
+
+def live_report(scale: float = 0.05, kernels: str = "auto",
+                t_sim_ms: float = 100.0, seed: int = 3) -> Dict:
+    """Build, measure, and roofline one microcircuit cell (the --live CLI)."""
+    from benchmarks.common import time_sim
+    from repro.api import Simulator
+    from repro.configs.microcircuit import MicrocircuitConfig
+
+    sim = Simulator(MicrocircuitConfig(
+        scale=scale, strategy="ell", seed=seed, t_presim=0.0,
+        kernels=kernels))
+    roof = live_roofline(sim)
+    res = time_sim(sim, t_sim_ms)
+    return with_achieved(roof, res.wall_s / res.n_steps)
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--live", action="store_true",
+                    help="roofline the live simulator step program "
+                         "(measured) instead of the dry-run artifacts")
+    ap.add_argument("--scale", type=float, default=0.05)
+    ap.add_argument("--kernels", default="auto",
+                    choices=("auto", "fused", "split", "reference"))
+    ap.add_argument("--t-sim", type=float, default=100.0)
+    args = ap.parse_args(argv)
+
+    if args.live:
+        r = live_report(scale=args.scale, kernels=args.kernels,
+                        t_sim_ms=args.t_sim)
+        print(f"roofline/live/scale{args.scale:g}/{args.kernels},"
+              f"{r['measured_step_s']*1e6:.1f},"
+              f"flops={r['flops_per_step']:.3g};"
+              f"bytes_floor={r['hbm_bytes_per_step_floor']:.3g};"
+              f"dom={r['dominant']};"
+              f"rtf_bound_v5e={r['rtf_bound_v5e'][0]:.2e}"
+              f"..{r['rtf_bound_v5e'][1]:.2e};"
+              f"pct_peak_hbm={r['pct_peak_hbm']:.3f}")
+        print(json.dumps(r, indent=2))
+        return
+
     rows = report("pod1")
     for r in rows:
         print(f"roofline/{r['arch']}/{r['shape']},"

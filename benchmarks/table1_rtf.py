@@ -9,6 +9,10 @@ Ledger modes turn the measurement into a regression gate:
     # measure the strategy x scale sweep, persist the ledger
     python benchmarks/table1_rtf.py --sweep --out artifacts/bench/BENCH_rtf.json
 
+    # ... with per-step roofline numbers (achieved vs v5e peak) and the
+    # fused one-kernel-step rows attached to every entry
+    python benchmarks/table1_rtf.py --sweep --roofline --out BENCH_rtf.json
+
     # ... and flag regressions against the committed reference ledger
     python benchmarks/table1_rtf.py --sweep --compare BENCH_rtf.json
 
@@ -121,7 +125,8 @@ def print_table():
 
 
 def run_sweep(scales, strategies, t_sim_ms: float, seed: int = 3,
-              trials: int = 1, plastic: bool = False):
+              trials: int = 1, plastic: bool = False,
+              roofline: bool = False):
     """Measure RTF for every strategy x scale cell; returns ledger entries.
 
     The connectome is built once per scale and shared across strategies so
@@ -136,7 +141,15 @@ def run_sweep(scales, strategies, t_sim_ms: float, seed: int = 3,
     closing argument (learning runs extend over hours and days of
     biological time, so the plastic RTF is what bounds them).  Strategies
     without a live-weight path (``dense``) skip the plastic cell.
+
+    ``roofline`` attaches a per-step roofline to every measured entry
+    (``benchmarks/roofline.live_roofline`` folded with the measured step
+    time — achieved vs v5e-peak FLOP/s and HBM bytes/s) and adds
+    ``rtf/ell+fused/...`` rows measuring the one-kernel step
+    (``kernels="fused"``; interpret mode off-TPU) next to the split
+    ``ell`` cells, so the fused-vs-split RTF ratio lives in the ledger.
     """
+    from benchmarks import roofline as RL
     from repro.core.connectivity import build_connectome
     from repro.core.delivery import get_strategy
     entries = []
@@ -157,6 +170,13 @@ def run_sweep(scales, strategies, t_sim_ms: float, seed: int = 3,
                                   result=res, connectome=c)
         if plasticity is not None:
             entry["plasticity"] = plasticity
+        pol = sim.sim_config.kernels
+        if pol is not None:
+            entry["kernels"] = pol.describe()
+        if roofline:
+            roof = RL.live_roofline(sim)
+            entry["roofline"] = RL.with_achieved(
+                roof, entry["wall_s"] / entry["n_steps"])
         entries.append(entry)
         print(fmt_row(name, rtf * 1e6, derived))
         return rtf
@@ -168,6 +188,14 @@ def run_sweep(scales, strategies, t_sim_ms: float, seed: int = 3,
                                      seed=seed, t_presim=0.0)
             rtf_static = measure(f"rtf/{strategy}/scale{scale:g}", cfg, c,
                                  strategy, scale)
+            fcfg = MicrocircuitConfig(scale=scale, strategy="ell",
+                                      seed=seed, t_presim=0.0,
+                                      kernels="fused")
+            if roofline and strategy == "ell":
+                rtf_f = measure(f"rtf/ell+fused/scale{scale:g}", fcfg, c,
+                                "ell", scale)
+                print(f"# fused step ell/scale{scale:g}: "
+                      f"{rtf_f / rtf_static:.2f}x vs split")
             if plastic:
                 if not get_strategy(strategy).supports_live_weights:
                     print(f"# rtf/{strategy}+pair_stdp/scale{scale:g}: "
@@ -178,6 +206,9 @@ def run_sweep(scales, strategies, t_sim_ms: float, seed: int = 3,
                     strategy, scale, plasticity="pair_stdp")
                 print(f"# plastic overhead {strategy}/scale{scale:g}: "
                       f"{rtf_p / rtf_static:.2f}x")
+                if roofline and strategy == "ell":
+                    measure(f"rtf/ell+fused+pair_stdp/scale{scale:g}",
+                            fcfg, c, "ell", scale, plasticity="pair_stdp")
     return entries
 
 
@@ -200,6 +231,11 @@ def main(argv=None) -> int:
                          "composed in (rtf/<strategy>+pair_stdp/... "
                          "entries) so the ledger records the "
                          "static-vs-plastic RTF overhead; implies --sweep")
+    ap.add_argument("--roofline", action="store_true",
+                    help="attach per-step roofline numbers (HLO FLOPs/"
+                         "bytes, achieved vs v5e peak) to every sweep "
+                         "entry and measure the fused one-kernel step "
+                         "(rtf/ell+fused/... rows); implies --sweep")
     ap.add_argument("--seed", type=int, default=3)
     ap.add_argument("--out", default=None, metavar="PATH",
                     help="write the measured sweep as a ledger JSON")
@@ -216,7 +252,7 @@ def main(argv=None) -> int:
                          "regression fires (default 0.5 = 50%%)")
     args = ap.parse_args(argv)
 
-    if args.plastic:
+    if args.plastic or args.roofline:
         args.sweep = True
     if not (args.sweep or args.replay or args.compare):
         print_table()
@@ -228,9 +264,11 @@ def main(argv=None) -> int:
         scales = [float(s) for s in args.scales.split(",") if s]
         strategies = [s for s in args.strategies.split(",") if s]
         entries = run_sweep(scales, strategies, args.t_sim, seed=args.seed,
-                            trials=args.trials, plastic=args.plastic)
+                            trials=args.trials, plastic=args.plastic,
+                            roofline=args.roofline)
         meta = {"t_sim_ms": args.t_sim, "seed": args.seed,
-                "trials": args.trials, "plastic": bool(args.plastic)}
+                "trials": args.trials, "plastic": bool(args.plastic),
+                "roofline": bool(args.roofline)}
         if args.out:
             current = common.write_ledger(args.out, entries, meta=meta)
             print(f"ledger written: {args.out} ({len(entries)} entries)")

@@ -91,9 +91,14 @@ def main():
                          "(single-trial only)")
     ap.add_argument("--checkpoint-dir", default=None,
                     help="persist the session every chunk")
-    ap.add_argument("--use-kernels", action="store_true",
-                    help="Pallas kernels (interpret mode on CPU: slow, "
+    ap.add_argument("--kernels", default=None,
+                    choices=["auto", "fused", "split", "reference"],
+                    help="KernelPolicy mode (default: auto — fused "
+                         "one-kernel step on TPU, phase-split elsewhere; "
+                         "Pallas runs in interpret mode on CPU: slow, "
                          "bit-exact)")
+    ap.add_argument("--use-kernels", action="store_true",
+                    help="deprecated: same as --kernels split")
     ap.add_argument("--stdp", action="store_true",
                     help="compose the pair_stdp plasticity rule (E->E "
                          "pair STDP) into the loop")
@@ -110,8 +115,10 @@ def main():
 
     exp = build_experiment(args)
     sim_kwargs = {}
-    if args.use_kernels:
-        sim_kwargs.update(use_lif_kernel=True, use_deliver_kernel=True)
+    if args.kernels is not None:
+        sim_kwargs.update(kernels=args.kernels)
+    elif args.use_kernels:
+        sim_kwargs.update(kernels="split")
 
     t0 = time.perf_counter()
     if args.chunk > 0:

@@ -71,6 +71,15 @@ def cmd_hlo(args) -> int:
     findings = check_scenarios(args.scenarios or None,
                                n_steps=args.n_steps,
                                max_converts=args.max_converts)
+    if args.fused:
+        # second pass with the one-kernel step forced on: pins the fused
+        # op census (HLO001-HLO004) for every scenario, so a regression
+        # in the mega-kernel's lowering fails the gate even when no
+        # committed scenario selects kernels="fused" itself
+        findings.extend(check_scenarios(args.scenarios or None,
+                                        n_steps=args.n_steps,
+                                        max_converts=args.max_converts,
+                                        kernels="fused"))
     # HLO contracts are hard invariants: no baseline, every finding fails
     return _report_and_exit(findings, None, args.json,
                             tool="repro.analysis.hlo")
@@ -127,6 +136,9 @@ def main(argv=None) -> int:
                    help="scenario JSONs (default examples/scenarios/*)")
     p.add_argument("--n-steps", type=int, default=16)
     p.add_argument("--max-converts", type=int, default=None)
+    p.add_argument("--fused", action="store_true",
+                   help="also check each scenario with kernels='fused' "
+                        "forced (op census of the one-kernel step)")
     p.add_argument("--json", default=None, metavar="OUT")
     p.set_defaults(fn=cmd_hlo)
 

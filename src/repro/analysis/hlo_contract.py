@@ -72,17 +72,29 @@ def fused_step_hlo(sim, n_steps: int = 16,
 
 
 def check_hlo(hlo: str, *, symbol: str = "<hlo>", path: str = "",
-              max_converts: int = DEFAULT_MAX_CONVERTS) -> List[Finding]:
-    """Run contracts HLO001-HLO004 on an HLO module's text."""
+              max_converts: int = DEFAULT_MAX_CONVERTS,
+              max_entry_whiles: int = 1) -> List[Finding]:
+    """Run contracts HLO001-HLO004 on an HLO module's text.
+
+    ``max_entry_whiles`` is 1 for the split step (everything lives in
+    the scan).  The one-kernel step legitimately carries a few extra
+    entry-level loops — its epilogue delivers the final spike vector
+    *once* after the scan (id compaction + ring scatter, and the
+    plasticity flush under STDP), which is once-per-call work, not
+    per-step work — so the fused census passes a higher budget.
+    """
     census = op_census(hlo)
     out: List[Finding] = []
 
     whiles = census["entry_whiles"]
-    if whiles != 1:
+    if not (1 <= whiles <= max_entry_whiles):
+        want = "exactly 1 entry-level while (the scan)" \
+            if max_entry_whiles == 1 else \
+            f"1..{max_entry_whiles} entry-level whiles (the scan plus " \
+            f"the once-per-call epilogue)"
         out.append(Finding(
             "HLO001", path, 0, symbol,
-            f"fused step must lower to exactly 1 entry-level while "
-            f"(the scan), found {whiles}"))
+            f"fused step must lower to {want}, found {whiles}"))
 
     callbacks = {t: n for t, n in census["custom_call_targets"].items()
                  if any(m in t.lower() for m in _CALLBACK_MARKERS)}
@@ -108,13 +120,18 @@ def check_hlo(hlo: str, *, symbol: str = "<hlo>", path: str = "",
 
 def check_scenario(path: str, *, n_steps: int = 16,
                    max_converts: int = DEFAULT_MAX_CONVERTS,
-                   scale: float = 0.02) -> List[Finding]:
+                   scale: float = 0.02,
+                   kernels: Optional[str] = None) -> List[Finding]:
     """Contract-check one committed scenario JSON.
 
     The scenario's model is instantiated at a contract-checking scale
     (structure is scale-invariant; compile time is not) on its own
     backend when fused, else on a fused stand-in of the same model so
     every scenario pins the step it would run under ``backend: fused``.
+    ``kernels`` forces a KernelPolicy mode on the stand-in (e.g.
+    ``"fused"`` pins the one-kernel step's op census regardless of the
+    scenario's own policy; requires the ``ell`` strategy, so scenarios
+    on other strategies are re-pointed at it for the check).
     """
     import dataclasses as dc
     from repro.api.experiment import Experiment
@@ -127,11 +144,20 @@ def check_scenario(path: str, *, n_steps: int = 16,
         exp = dc.replace(exp, backend="fused", model=model)
     else:
         exp = dc.replace(exp, model=model)
-    sim = exp.make_simulator()
+    sim_kwargs = {}
+    if kernels is not None:
+        sim_kwargs["kernels"] = kernels
+        if kernels == "fused" and getattr(model, "strategy", None) != "ell":
+            sim_kwargs["strategy"] = "ell"
+    sim = exp.make_simulator(**sim_kwargs)
     symbol = exp.name or os.path.basename(path)
+    if kernels is not None:
+        symbol = f"{symbol}[kernels={kernels}]"
     hlo = fused_step_hlo(sim, n_steps=n_steps)
+    max_whiles = 8 if kernels == "fused" else 1
     return check_hlo(hlo, symbol=symbol, path=_relpath(path),
-                     max_converts=max_converts)
+                     max_converts=max_converts,
+                     max_entry_whiles=max_whiles)
 
 
 def _relpath(path: str) -> str:
@@ -142,8 +168,8 @@ def _relpath(path: str) -> str:
 
 def check_scenarios(paths: Optional[Sequence[str]] = None, *,
                     n_steps: int = 16,
-                    max_converts: int = DEFAULT_MAX_CONVERTS
-                    ) -> List[Finding]:
+                    max_converts: int = DEFAULT_MAX_CONVERTS,
+                    kernels: Optional[str] = None) -> List[Finding]:
     """Contract-check many scenarios (default: examples/scenarios/*.json)."""
     if not paths:
         paths = sorted(glob_mod.glob(
@@ -151,5 +177,6 @@ def check_scenarios(paths: Optional[Sequence[str]] = None, *,
     findings: List[Finding] = []
     for p in paths:
         findings.extend(check_scenario(p, n_steps=n_steps,
-                                       max_converts=max_converts))
+                                       max_converts=max_converts,
+                                       kernels=kernels))
     return findings

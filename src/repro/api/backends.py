@@ -30,6 +30,7 @@ checkpoint/restore uniform across engines.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Any, ClassVar, Dict, FrozenSet, Optional, Sequence, Tuple
 
@@ -44,10 +45,20 @@ from repro.serve.compile_cache import ExecutableCache
 from repro.core import distributed as DD
 from repro.core import stimulus as stim
 from repro.core.connectivity import Connectome
-from repro.core.engine import (SimConfig, SimState, deliver_phase, init_state,
+from repro.core.engine import (SimConfig, SimState, _external_drive,
+                               deliver_phase, fused_update_phase, init_state,
                                prepare_network, resolve_sim_config,
                                update_phase)
 from repro.core.neuron import NeuronParams, Propagators
+
+
+def _force_split_step(cfg: SimConfig) -> SimConfig:
+    """Per-step-dispatch backends have no one-kernel path: pin the resolved
+    policy's step to the phase-split loop (per-op choices untouched)."""
+    if cfg.kernels is not None and cfg.kernels.step == "fused":
+        cfg = dataclasses.replace(
+            cfg, kernels=dataclasses.replace(cfg.kernels, step="split"))
+    return cfg
 
 
 class Backend:
@@ -152,6 +163,12 @@ class Backend:
     def supports_probe(self, probe: Probe) -> bool:
         return True
 
+    def _normalize_cfg(self, cfg: SimConfig) -> SimConfig:
+        """Backend-specific post-resolution fixup (identity by default);
+        per-step-dispatch backends pin the kernel policy's step to
+        "split" here so ``built_for`` stays in sync with ``build``."""
+        return cfg
+
     def built_for(self, c: Connectome, cfg: SimConfig) -> bool:
         """True when ``build(c, cfg)`` would reproduce the current build —
         the shared-backend fast path: the serve session manager hands one
@@ -161,7 +178,7 @@ class Backend:
         if getattr(self, "c", None) is not c:
             return False
         try:
-            return self.cfg == resolve_sim_config(cfg, c)
+            return self.cfg == self._normalize_cfg(resolve_sim_config(cfg, c))
         except Exception:
             return False
 
@@ -339,16 +356,53 @@ class FusedBackend(Backend):
 
     def _runner(self, n_steps: int, probes):
         """The raw (unjitted) scan runner — ``run`` jits it as-is,
-        ``run_batch`` wraps it in ``jax.vmap`` first."""
+        ``run_batch`` wraps it in ``jax.vmap`` first.
+
+        With a resolved ``KernelPolicy`` whose ``step == "fused"`` the scan
+        body is the one-kernel rotated loop (``kernels/lif_deliver``):
+        iteration ``i`` delivers step ``i-1``'s spikes and integrates step
+        ``i`` in a single Pallas launch, and an epilogue after the scan
+        delivers the final step's spikes so the returned state is bitwise
+        what the phase-split loop produces.  Mid-scan, ``ctx.state.ring``
+        (and the plastic weights seen by weight probes) lag one step; no
+        builtin probe reads the ring, and the weight-probe lag is pinned in
+        the tests.
+        """
         c, cfg, prop, drive = self.c, self.cfg, self.prop, self.drive
         n, n_exc, n_pops = c.n_total, c.n_exc, self.n_pops
+        pol = cfg.kernels
+        fused = pol is not None and pol.resolved and pol.step == "fused"
         step_probes, stream_probes = split_probes(probes)
 
         def stream_update(scs, spiked, ctx):
             return tuple(p.update(sc, ctx if p.needs == "ctx" else spiked)
                          for p, sc in zip(stream_probes, scs))
 
-        if self._bound is None:
+        if self._bound is None and fused:
+            strategy = dlv.get_strategy(cfg.strategy)
+
+            def runner(state, net, carries):
+                def step(carry, _):
+                    (sim, spk_prev), scs = carry
+                    sim, spiked = fused_update_phase(
+                        sim, net, prop, cfg, c.w_ext, n, n_exc, spk_prev,
+                        drive)
+                    ctx = ProbeContext(sim, spiked, net, n_pops)
+                    scs = stream_update(scs, spiked, ctx)
+                    return ((sim, spiked), scs), tuple(p(ctx)
+                                                       for p in step_probes)
+                spk0 = jnp.zeros((n,), jnp.bool_)
+                ((state, spk_last), carries), outs = jax.lax.scan(
+                    step, ((state, spk0), carries), None, length=n_steps)
+                # epilogue: the rotated loop leaves the last step's spikes
+                # undelivered — land them at their true phase t-1
+                ring, ovf = strategy.deliver(
+                    state.ring, net.tables, spk_last, state.t - 1, n_exc,
+                    cfg)
+                state = SimState(state.neuron, ring, state.t, state.key,
+                                 state.overflow + ovf)
+                return state, carries, outs
+        elif self._bound is None:
             def runner(state, net, carries):
                 def step(carry, _):
                     sim, scs = carry
@@ -362,10 +416,71 @@ class FusedBackend(Backend):
                     step, (state, carries), None, length=n_steps)
                 return state, carries, outs
         else:
+            from repro.core import plasticity as PL
+            from repro.kernels import ops as kops
             bound = self._bound
             strategy = dlv.get_strategy(cfg.strategy)
             mask = bound.plastic_mask
+            fused = fused and isinstance(bound, PL._BoundPairSTDP)
 
+        if self._bound is not None and fused:
+            k_out = bound.k_out
+            dep_coef, _, decay_p, decay_m = PL.stdp_coefficients(bound.cfg)
+
+            def runner(state, net, tables, carries):
+                k_ell = net.tables.targets.shape[1]
+                pmask = tables.plastic_out
+                if k_ell != k_out:            # ELL pad, no reorder
+                    pmask = jnp.pad(pmask,
+                                    ((0, 0), (0, k_ell - k_out)))
+
+                def step(carry, _):
+                    (sim, ps, spk_prev), scs = carry
+                    key, ext_ex, i_dc = _external_drive(
+                        sim, net, cfg, c.w_ext, sim.ring.dtype, drive)
+                    if ext_ex is None:
+                        ext_ex = jnp.zeros((n,), sim.ring.dtype)
+                    i_dc = jnp.broadcast_to(i_dc, (n,)).astype(
+                        sim.ring.dtype)
+                    live = strategy.live_tables(
+                        net.tables, bound.weight_view(ps, tables))
+                    (neuron, ring, spiked, w_out, xpre_o, xpost_o, ids,
+                     ovf) = kops.lif_deliver_plastic(
+                        sim.neuron, sim.ring, sim.t, spk_prev, live,
+                        live.weights, pmask, ps.x_pre, ps.x_post, prop,
+                        ext_ex, i_dc, n_exc=n_exc,
+                        spike_budget=cfg.spike_budget, dep_coef=dep_coef,
+                        decay_p=decay_p, decay_m=decay_m,
+                        interpret=pol.interpret)
+                    w_flat = jnp.concatenate(
+                        [w_out[:, :k_out].reshape(-1),
+                         ps.weights[(n + 1) * k_out:]])
+                    w_flat = PL.stdp_pot_clip(w_flat, ps.x_pre, ids,
+                                              tables, bound.cfg,
+                                              bound.clip_mask)
+                    ps = PL.PlasticState(w_flat, xpre_o, xpost_o)
+                    sim = SimState(neuron, ring, sim.t + 1, key,
+                                   sim.overflow + ovf)
+                    ctx = ProbeContext(sim, spiked, net, n_pops,
+                                       plastic=ps, plastic_mask=mask)
+                    scs = stream_update(scs, spiked, ctx)
+                    return ((sim, ps, spiked), scs), tuple(
+                        p(ctx) for p in step_probes)
+                sim0, ps0 = state
+                spk0 = jnp.zeros((n,), jnp.bool_)
+                ((state, ps, spk_last), carries), outs = jax.lax.scan(
+                    step, ((sim0, ps0, spk0), carries), None,
+                    length=n_steps)
+                # epilogue: deliver + full STDP step for the final spikes
+                live = strategy.live_tables(
+                    net.tables, bound.weight_view(ps, tables))
+                ring, ovf = strategy.deliver(
+                    state.ring, live, spk_last, state.t - 1, n_exc, cfg)
+                state = SimState(state.neuron, ring, state.t, state.key,
+                                 state.overflow + ovf)
+                ps = bound.step(ps, tables, spk_last)
+                return (state, ps), carries, outs
+        elif self._bound is not None:
             def runner(state, net, tables, carries):
                 def step(carry, _):
                     (sim, ps), scs = carry
@@ -415,8 +530,11 @@ class InstrumentedBackend(Backend):
         # ctx-consuming ones (weight_stats) need the fused plastic loop
         return not (isinstance(probe, StreamProbe) and probe.needs != "spiked")
 
+    def _normalize_cfg(self, cfg):
+        return _force_split_step(cfg)
+
     def build(self, c, cfg, neuron=None):
-        cfg = resolve_sim_config(cfg, c)
+        cfg = _force_split_step(resolve_sim_config(cfg, c))
         self._invalidate_on_rebuild(c, cfg, self._stream_cache,
                                     self._record_cache)
         if getattr(self, "c", None) is not None:
@@ -542,8 +660,11 @@ class ShardedBackend(Backend):
         self._cache = ExecutableCache("sharded.jit")
         self._aot = ExecutableCache("sharded.aot")
 
+    def _normalize_cfg(self, cfg):
+        return _force_split_step(cfg)
+
     def build(self, c, cfg, neuron=None):
-        cfg = resolve_sim_config(cfg, c)
+        cfg = _force_split_step(resolve_sim_config(cfg, c))
         self._invalidate_on_rebuild(c, cfg, self._cache, self._aot)
         strategy = dlv.get_strategy(cfg.strategy)
         if not strategy.supports_sharding:

@@ -107,6 +107,16 @@ class Experiment:
                              "stimulus, not on the model config")
         model = dataclasses.asdict(self.model)
         model.pop("stimulus", None)
+        # kernels defaults to None ("auto") — elided so pre-KernelPolicy
+        # scenario files round-trip verbatim; when set it must be a mode
+        # string (policy *objects* are an in-process Simulator affair)
+        if model.get("kernels") is None:
+            model.pop("kernels", None)
+        elif not isinstance(self.model.kernels, str):
+            raise ValueError(
+                "scenarios serialize kernels= as a mode string "
+                "('auto'/'fused'/'split'/'reference'); pass KernelPolicy "
+                "objects to Simulator directly")
         return {
             "schema": SCHEMA,
             "name": self.name,
@@ -217,7 +227,7 @@ class Experiment:
         ``connectome`` reuses a pre-built network (trial sweeps over one
         instantiation); ``warmup=True`` compiles before the timed phase
         so the reported RTF excludes compilation; ``sim_kwargs`` forward
-        to the :class:`Simulator` (e.g. ``use_lif_kernel=True``).
+        to the :class:`Simulator` (e.g. ``kernels="fused"``).
         """
         sim = self.make_simulator(connectome, **sim_kwargs)
         model = self.model

@@ -84,7 +84,10 @@ class Simulator:
         ``plasticity=`` instead.
     sim_config:
         Explicit :class:`SimConfig`; otherwise derived from ``config`` and
-        ``**overrides`` (e.g. ``use_lif_kernel=True``).
+        ``**overrides`` (e.g. ``kernels="fused"`` or
+        ``kernels=KernelPolicy(lif="pallas")``; the resolved
+        :class:`~repro.core.kernel_policy.KernelPolicy` is available
+        afterwards as ``sim.sim_config.kernels``).
     """
 
     def __init__(self, config=None, *, connectome: Optional[Connectome] = None,
@@ -111,6 +114,7 @@ class Simulator:
                 spike_budget=getattr(config, "spike_budget", None),
                 strict_delivery=getattr(config, "strict_delivery", False),
                 stimulus=getattr(config, "stimulus", None),
+                kernels=getattr(config, "kernels", None),
             )
         if overrides:
             sim_config = dataclasses.replace(sim_config, **overrides)

@@ -27,6 +27,9 @@ class MicrocircuitConfig:
                                          # paper's 8 Hz poisson_background.
                                          # Scenario files carry the timeline
                                          # on Experiment.stimulus instead.
+    kernels: Optional[object] = None     # KernelPolicy | mode string
+                                         # ("auto"/"fused"/"split"/
+                                         # "reference"); None -> "auto"
 
 
 CONFIG = MicrocircuitConfig()

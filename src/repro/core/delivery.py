@@ -31,8 +31,8 @@ registry instead of hardcoding branches:
   on-chip.  O(S*K) work and O(N*K) memory — the only layout that reaches
   the paper's full scale (~0.3 billion explicit synapses).  Off-TPU the
   strategy runs the same math through the pure-jnp gather/scatter path
-  unless ``SimConfig.use_deliver_kernel`` forces the (interpret-mode)
-  kernel.
+  unless the resolved ``SimConfig.kernels`` policy
+  (``KernelPolicy(deliver='pallas')``) forces the (interpret-mode) kernel.
 
 All strategies write into ``ring[D, 2, N+1]``: channel 0/1 = excitatory/
 inhibitory arrivals, one trailing dump column absorbs padded scatters.
@@ -53,6 +53,17 @@ from typing import Any, Dict, NamedTuple, Optional, Tuple, Type
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core import kernel_policy as kpol
+
+
+def _wants_pallas_deliver(cfg) -> bool:
+    """Kernel selection for the delivery phase: the resolved KernelPolicy
+    when the config carries one, else the legacy boolean flag."""
+    pol = kpol.policy_of(cfg)
+    if pol is not None:
+        return pol.deliver == "pallas"
+    return bool(cfg.use_deliver_kernel)
 
 
 class DeliveryOverflowError(RuntimeError):
@@ -141,7 +152,8 @@ def deliver_dense(ring: jnp.ndarray, tables: DenseTables,
                 "custom matvec (the gated Pallas kernel) needs the "
                 "bin-major W[D, P, N] layout, but these DenseTables hold "
                 "the split GEMM layout — rebuild the tables with "
-                "use_deliver_kernel=True (DenseDelivery.prepare)")
+                "kernels=KernelPolicy(deliver='pallas') "
+                "(DenseDelivery.prepare)")
         s = spiked.astype(tables.W_ex.dtype)
         matvec = lambda v, W: jnp.matmul(
             v[None, :], W,
@@ -342,7 +354,7 @@ class DenseDelivery(DeliveryStrategy):
     def prepare(self, c, cfg, dtype=jnp.float32) -> DenseTables:
         from repro.core.connectivity import dense_delay_binned
         W = dense_delay_binned(c)                     # [D, N, N]
-        if cfg.use_deliver_kernel:
+        if _wants_pallas_deliver(cfg):
             # the gated Pallas kernel's block map walks delay-bin tiles
             return DenseTables(W=jnp.asarray(W, dtype=dtype))
         # source-major split GEMM layout (see DenseTables); intermediates
@@ -360,7 +372,7 @@ class DenseDelivery(DeliveryStrategy):
 
     def deliver(self, ring, tables, spiked, t, n_exc, cfg):
         matvec = None
-        if cfg.use_deliver_kernel:
+        if _wants_pallas_deliver(cfg):
             from repro.kernels import ops as kops
             matvec = kops.gated_spike_matvec
         return deliver_dense(ring, tables, spiked, t, n_exc, matvec=matvec)
@@ -371,12 +383,13 @@ class EllDelivery(DeliveryStrategy):
     """Sparse-ELL delivery backed by the Pallas ``ell_deliver`` kernel.
 
     Same ELL tables as ``event`` (rows padded to a lane-aligned K so the
-    kernel's tile loop divides evenly).  On TPU — or when
-    ``cfg.use_deliver_kernel`` asks for it — the kernel scalar-prefetches
-    the spike ids, gathers only the S spiking rows tile-by-tile from HBM
-    and scatter-adds on-chip; elsewhere the identical math runs through the
-    pure-jnp gather/scatter (interpret-mode kernels are tracing-bound on
-    CPU, the repo-wide convention is opt-in via ``use_deliver_kernel``).
+    kernel's tile loop divides evenly).  On TPU — or when the resolved
+    ``KernelPolicy`` says ``deliver='pallas'`` — the kernel scalar-
+    prefetches the spike ids, gathers only the S spiking rows tile-by-tile
+    from HBM and scatter-adds on-chip; elsewhere the identical math runs
+    through the pure-jnp gather/scatter (interpret-mode kernels are
+    tracing-bound on CPU, the repo-wide convention is opt-in via the
+    kernel policy).
     """
 
     name = "ell"
@@ -385,8 +398,8 @@ class EllDelivery(DeliveryStrategy):
     #: output block; past this budget (full scale needs ~28 MB vs ~16 MB
     #: VMEM) the automatic TPU path falls back to the XLA gather/scatter
     #: until the column-tiled kernel variant lands.  An explicit
-    #: ``use_deliver_kernel=True`` still forces the kernel.
-    kernel_max_ring_bytes = 12 * 1024 ** 2
+    #: ``KernelPolicy(deliver='pallas')`` still forces the kernel.
+    kernel_max_ring_bytes = kpol.FUSED_MAX_RING_BYTES
 
     def prepare(self, c, cfg) -> EventTables:
         targets = np.asarray(c.targets)
@@ -432,13 +445,20 @@ class EllDelivery(DeliveryStrategy):
 
     def deliver(self, ring, tables, spiked, t, n_exc, cfg):
         budget = _require_budget(cfg)
-        D, _, n_cols = ring.shape
-        upd_bytes = 2 * D * (-(-n_cols // 128) * 128) * 4
-        use_kernel = (cfg.use_deliver_kernel
-                      or (jax.default_backend() == "tpu"
-                          and upd_bytes <= self.kernel_max_ring_bytes))
+        pol = kpol.policy_of(cfg)
+        if pol is not None:
+            use_kernel = pol.deliver == "pallas"
+            interpret = pol.interpret
+        else:                 # unresolved config: legacy flag + TPU gate
+            D, _, n_cols = ring.shape
+            upd_bytes = 2 * D * (-(-n_cols // 128) * 128) * 4
+            use_kernel = (cfg.use_deliver_kernel
+                          or (jax.default_backend() == "tpu"
+                              and upd_bytes <= self.kernel_max_ring_bytes))
+            interpret = None
         if use_kernel:
             from repro.kernels import ops as kops
             return kops.ell_deliver(ring, tables, spiked, t, n_exc, budget,
-                                    block_k=self.block_k)
+                                    block_k=self.block_k,
+                                    interpret=interpret)
         return deliver_event(ring, tables, spiked, t, n_exc, budget)

@@ -38,8 +38,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import delivery as dlv
+from repro.core import kernel_policy as kpol
 from repro.core import stimulus as stim
 from repro.core.connectivity import Connectome
+from repro.core.kernel_policy import KernelPolicy
 from repro.core.neuron import NeuronParams, NeuronState, Propagators, lif_step
 from repro.core.params import InputParams
 
@@ -57,20 +59,24 @@ class SimConfig:
     strict_delivery: bool = False      # raise DeliveryOverflowError instead
                                        # of warning when spikes were dropped
     record: str = "pop_counts"         # "spikes" | "pop_counts" | "none"
-    use_lif_kernel: bool = False       # Pallas fused update (interpret on CPU)
-    use_deliver_kernel: bool = False   # Pallas delivery kernels (gated dense
-                                       # matvec / sparse-ELL); interpret-mode
-                                       # off TPU
+    use_lif_kernel: bool = False       # deprecated: kernels=KernelPolicy(
+                                       # lif="pallas")
+    use_deliver_kernel: bool = False   # deprecated: kernels=KernelPolicy(
+                                       # deliver="pallas")
     bg_rate: float = _DEFAULT_BG_RATE  # deprecated: set stimulus= instead
     state_dtype: type = jnp.float32    # V / currents / ring precision
     stimulus: Optional[tuple] = None   # tuple of repro.core.stimulus.Stimulus
                                        # (None -> the bg_rate Poisson drive;
                                        # resolve_sim_config fills it)
+    kernels: Optional[Any] = None      # KernelPolicy | mode string
+                                       # ("auto"|"fused"|"split"|"reference");
+                                       # resolve_sim_config resolves it
 
 
 def resolve_sim_config(cfg: SimConfig, c: Connectome) -> SimConfig:
     """Fill connectome-dependent defaults: validates the strategy name,
-    derives ``spike_budget`` from the expected firing rates when unset, and
+    derives ``spike_budget`` from the expected firing rates when unset,
+    resolves the kernel policy against the platform/connectome, and
     normalises the stimulus timeline (an unset ``stimulus`` becomes the
     ``poisson_background`` registry entry carrying the legacy ``bg_rate``).
     The api backends call this in ``build``; direct ``deliver_phase`` users
@@ -79,6 +85,18 @@ def resolve_sim_config(cfg: SimConfig, c: Connectome) -> SimConfig:
     if cfg.spike_budget is None:
         cfg = dataclasses.replace(
             cfg, spike_budget=dlv.auto_spike_budget(c, cfg.dt))
+    if kpol.policy_of(cfg) is None:
+        if cfg.use_lif_kernel or cfg.use_deliver_kernel:
+            warnings.warn(
+                "SimConfig.use_lif_kernel / use_deliver_kernel are "
+                "deprecated; select kernels with SimConfig.kernels=, e.g. "
+                "kernels=KernelPolicy(lif='pallas', deliver='pallas') or "
+                "kernels='split'", DeprecationWarning, stacklevel=3)
+        cfg = dataclasses.replace(cfg, kernels=kpol.resolve(
+            cfg.kernels, strategy=cfg.strategy, state_dtype=cfg.state_dtype,
+            n_total=c.n_total, d_max_bins=c.d_max_bins,
+            use_lif_kernel=cfg.use_lif_kernel,
+            use_deliver_kernel=cfg.use_deliver_kernel))
     if cfg.stimulus is None:
         if cfg.bg_rate != _DEFAULT_BG_RATE:
             warnings.warn(
@@ -111,12 +129,16 @@ class Network(NamedTuple):
     @property
     def event(self) -> Optional[dlv.EventTables]:
         """Deprecated accessor kept for pre-registry callers."""
+        warnings.warn("Network.event is deprecated; use Network.tables",
+                      DeprecationWarning, stacklevel=2)
         t = self.tables
         return t if isinstance(t, dlv.EventTables) else None
 
     @property
     def dense(self) -> Optional[dlv.DenseTables]:
         """Deprecated accessor kept for pre-registry callers."""
+        warnings.warn("Network.dense is deprecated; use Network.tables",
+                      DeprecationWarning, stacklevel=2)
         t = self.tables
         return t if isinstance(t, dlv.DenseTables) else None
 
@@ -189,6 +211,34 @@ def init_state(c: Connectome, key, state_dtype=jnp.float32,
 # Phases
 # ---------------------------------------------------------------------------
 
+def _external_drive(state: SimState, net: Network, cfg: SimConfig,
+                    w_ext: float, dtype,
+                    drive: Optional[stim.Drive] = None):
+    """Advance the step key and evaluate the external drive.
+
+    Returns ``(key, ext_ex, i_dc)`` where ``ext_ex`` is the external
+    excitatory current contribution (already scaled by ``w_ext``; None when
+    the drive produces no spike input this step) and ``i_dc`` the effective
+    DC term.  Shared between the phase-split path and the fused one-kernel
+    step so both see bitwise-identical drive values.
+    """
+    i_dc = net.i_dc
+    if drive is None:
+        key, sub = jax.random.split(state.key)
+        lam = net.k_ext * (cfg.bg_rate * cfg.dt * 1e-3)
+        ext = jax.random.poisson(sub, lam, dtype=jnp.int32)
+        ext_ex = w_ext * ext.astype(dtype)
+    else:
+        keys = jax.random.split(state.key, drive.n_keys + 1)
+        key = keys[0]
+        I_ext, ext_in = drive(tuple(keys[1:]), state.t, state)
+        ext_ex = (None if ext_in is None
+                  else w_ext * ext_in.astype(dtype))
+        if I_ext is not None:
+            i_dc = i_dc + I_ext
+    return key, ext_ex, i_dc
+
+
 def update_phase(state: SimState, net: Network, prop: Propagators,
                  cfg: SimConfig, w_ext: float, n: int,
                  drive: Optional[stim.Drive] = None):
@@ -208,25 +258,18 @@ def update_phase(state: SimState, net: Network, prop: Propagators,
     in_ex = arrivals[0, :n]
     in_in = arrivals[1, :n]
 
-    i_dc = net.i_dc
-    if drive is None:
-        key, sub = jax.random.split(state.key)
-        lam = net.k_ext * (cfg.bg_rate * cfg.dt * 1e-3)
-        ext = jax.random.poisson(sub, lam, dtype=jnp.int32)
-        in_ex = in_ex + w_ext * ext.astype(in_ex.dtype)
-    else:
-        keys = jax.random.split(state.key, drive.n_keys + 1)
-        key = keys[0]
-        I_ext, ext_in = drive(tuple(keys[1:]), state.t, state)
-        if ext_in is not None:
-            in_ex = in_ex + w_ext * ext_in.astype(in_ex.dtype)
-        if I_ext is not None:
-            i_dc = i_dc + I_ext
+    key, ext_ex, i_dc = _external_drive(state, net, cfg, w_ext,
+                                        in_ex.dtype, drive)
+    if ext_ex is not None:
+        in_ex = in_ex + ext_ex
 
-    if cfg.use_lif_kernel:
+    pol = kpol.policy_of(cfg)
+    use_kernel = cfg.use_lif_kernel if pol is None else pol.lif == "pallas"
+    if use_kernel:
         from repro.kernels import ops as kops
         neuron, spiked = kops.lif_update(
-            state.neuron, prop, in_ex, in_in, i_dc)
+            state.neuron, prop, in_ex, in_in, i_dc,
+            interpret=None if pol is None else pol.interpret)
     else:
         neuron, spiked = lif_step(state.neuron, prop, in_ex, in_in, i_dc)
 
@@ -234,6 +277,37 @@ def update_phase(state: SimState, net: Network, prop: Propagators,
     ring = jax.lax.dynamic_update_index_in_dim(
         state.ring, jnp.zeros_like(arrivals), slot, axis=0)
     return SimState(neuron, ring, state.t, key, state.overflow), spiked
+
+
+def fused_update_phase(state: SimState, net: Network, prop: Propagators,
+                       cfg: SimConfig, w_ext: float, n: int, n_exc: int,
+                       spiked_prev: jnp.ndarray,
+                       drive: Optional[stim.Drive] = None):
+    """One rotated step of the fused one-kernel path (static weights).
+
+    Iteration ``i`` of the fused loop delivers the *previous* step's spikes
+    (at ring phase ``t-1``) and then integrates step ``i`` — the same
+    global op sequence as ``update_phase``/``deliver_phase`` interleaved,
+    so the trajectory is bitwise-identical.  The caller seeds
+    ``spiked_prev`` with zeros and must flush the final step's spikes with
+    a trailing ``deliver_phase``-style call after the scan (the backends'
+    epilogue does this).
+
+    Returns ``(state, spiked)`` with ``state.t`` advanced by one.
+    """
+    from repro.kernels import ops as kops
+    pol = kpol.policy_of(cfg)
+    key, ext_ex, i_dc = _external_drive(state, net, cfg, w_ext,
+                                        state.ring.dtype, drive)
+    if ext_ex is None:
+        ext_ex = jnp.zeros((n,), state.ring.dtype)
+    i_dc = jnp.broadcast_to(i_dc, (n,)).astype(state.ring.dtype)
+    neuron, ring, spiked, ovf = kops.lif_deliver(
+        state.neuron, state.ring, state.t, spiked_prev, net.tables, prop,
+        ext_ex, i_dc, n_exc=n_exc, spike_budget=cfg.spike_budget,
+        interpret=None if pol is None else pol.interpret)
+    return SimState(neuron, ring, state.t + 1, key,
+                    state.overflow + ovf), spiked
 
 
 def deliver_phase(state: SimState, net: Network, cfg: SimConfig,

@@ -192,6 +192,41 @@ def stdp_step(ps: PlasticState, tables: PlasticTables, spiked: jnp.ndarray,
     return PlasticState(w, x_pre, x_post)
 
 
+def stdp_coefficients(cfg: STDPConfig):
+    """(dep_coef, pot_coef, decay_p, decay_m) as Python floats — the
+    immediates ``stdp_step`` folds into its traced ops, exported so the
+    fused ``lif_deliver_plastic`` kernel bakes in bitwise-identical
+    constants."""
+    return (float(cfg.lr * cfg.A_minus * cfg.w_ref),
+            float(cfg.lr * cfg.A_plus * cfg.w_ref),
+            float(np.exp(-cfg.dt / cfg.tau_plus)),
+            float(np.exp(-cfg.dt / cfg.tau_minus)))
+
+
+def stdp_pot_clip(w: jnp.ndarray, x_pre: jnp.ndarray, ids: jnp.ndarray,
+                  tables: PlasticTables, cfg: STDPConfig,
+                  clip_mask: jnp.ndarray) -> jnp.ndarray:
+    """The potentiation scatter + clip half of :func:`stdp_step`, applied
+    to a flat weight array that already carries this step's depression.
+
+    The fused one-kernel path runs the depression (and the trace decay)
+    inside ``lif_deliver_plastic`` while the ELL weight tiles are on-chip;
+    potentiation gathers through the transposed in-adjacency — a second,
+    unrelated access pattern — so it stays an XLA scatter here, in
+    ``stdp_step``'s exact op order.  ``x_pre`` must be the *pre-update*
+    trace (before this step's decay+bump), ``ids`` the same padded spike
+    ids the kernel delivered.
+    """
+    w_max = cfg.w_max_factor * cfg.w_ref
+    src = tables.in_sources[ids]
+    maskp = tables.plastic_in[ids]
+    pot = cfg.lr * cfg.A_plus * cfg.w_ref * x_pre[src]
+    syn_in = tables.in_syn_idx[ids]
+    dw_pot = jnp.where(maskp, pot, 0.0)
+    w = w.at[syn_in.reshape(-1)].add(dw_pot.reshape(-1), mode="drop")
+    return jnp.where(clip_mask, jnp.clip(w, 0.0, w_max), w)
+
+
 def _padded_clip_mask(tables: PlasticTables, n_weights: int) -> jnp.ndarray:
     """Plastic mask padded to the flat weight-array length."""
     flat = tables.plastic_out.reshape(-1)

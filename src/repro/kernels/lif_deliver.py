@@ -1,0 +1,342 @@
+"""Pallas TPU kernel: the fused one-kernel simulation step.
+
+The phase-split hot loop costs one HBM round-trip per phase: ``deliver``
+scatters the previous step's spikes into the ring buffer, ``update`` reads
+a ring slot plus five state arrays, integrates, and writes them back.
+This kernel keeps the whole delay ring, the membrane state, and the
+scalar-prefetched spike ids resident on-chip across one step:
+
+* grid ``(S+1, K/block_k)`` — the first ``S`` rows replay the sparse-ELL
+  delivery of the *previous* step's spike ids (gathered row tiles, scalar
+  scatter into the VMEM-resident ring, s-major / k-minor order, exactly
+  :mod:`repro.kernels.ell_deliver`), scattering directly onto the aliased
+  ring block;
+* the final grid row (``s == S, kb == 0``) runs the whole-network LIF
+  update of :mod:`repro.kernels.lif_update` against the just-scattered
+  ring: it reads the current slot's arrival rows, integrates with the
+  propagator immediates, detects spikes, and zeroes the consumed slot —
+  all before the ring block is flushed to HBM once.
+
+Because the kernel can only prefetch spike ids that exist *before* it
+runs, the fused loop is rotated one step: iteration ``i`` delivers
+``spiked[i-1]`` (at ring phase ``t-1``) and then updates step ``i``.  The
+global op sequence — ``update_0, deliver_0, update_1, deliver_1, ...`` —
+is identical to the phase-split path, so trajectories match bitwise; the
+backends flush the final step's spikes with a split-path delivery
+epilogue after the scan.
+
+``lif_deliver_plastic`` additionally folds the pair-STDP depression and
+trace decay into the same pass: each gathered ELL weight tile is written
+back depressed (``w -= lr*A_minus*w_ref*x_post[target]`` on plastic
+synapses) while it is on-chip for the ring scatter, and the pre/post
+traces decay+bump in the LIF phase.  The potentiation scatter (indexed by
+the transposed in-adjacency, a different access pattern) and the weight
+clip stay in XLA — ``repro.core.plasticity.stdp_pot_clip`` applies them
+to the kernel's output in ``stdp_step``'s op order.
+
+Everything is f32 and the full ring must fit in VMEM
+(``kernel_policy.FUSED_MAX_RING_BYTES``); ``kernel_policy.resolve`` gates
+eligibility.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.neuron import Propagators
+
+
+def _lif_math(V, I_ex, I_in, refrac, in_ex, in_in, i_dc,
+              prop: Propagators):
+    """The exact op order of ``lif_update._kernel`` (and ``lif_step``)."""
+    V_new = (prop.E_L
+             + (V - prop.E_L) * prop.P22
+             + I_ex * prop.P21_ex
+             + I_in * prop.P21_in
+             + i_dc * prop.P20)
+    iexo = I_ex * prop.P11_ex + in_ex
+    iino = I_in * prop.P11_in + in_in
+    refractory = refrac > 0
+    V_new = jnp.where(refractory, prop.V_reset, V_new)
+    spiked = (V_new >= prop.V_th) & jnp.logical_not(refractory)
+    Vo = jnp.where(spiked, prop.V_reset, V_new)
+    refo = jnp.where(
+        spiked, prop.ref_steps, jnp.maximum(refrac - 1, 0)
+    ).astype(refrac.dtype)
+    return Vo, iexo, iino, refo, spiked
+
+
+def _deliver_row(s, ids_ref, meta_ref, tgt_ref, w_ref, db_ref, ring_ref,
+                 *, d_bins: int, block_k: int):
+    """Scatter one gathered ELL tile into the resident ring block.
+
+    ``s`` is the grid row, computed at kernel top level: calling
+    ``pl.program_id`` inside a ``pl.when`` body breaks interpret mode
+    (the primitive lands in the cond sub-jaxpr, outside the grid env).
+    """
+    t_prev = meta_ref[0]
+    n_exc = meta_ref[1]
+    sid = ids_ref[s]
+    ch = jnp.where(sid >= n_exc, 1, 0).astype(jnp.int32)
+
+    def body(j, _):
+        tg = tgt_ref[0, j]
+        w = w_ref[0, j]
+        db = db_ref[0, j]
+        slot = jax.lax.rem(t_prev + db, d_bins)
+        ring_ref[slot * 2 + ch, tg] += w
+        return 0
+
+    jax.lax.fori_loop(0, block_k, body, 0)
+
+
+def _lif_phase(meta_ref, V_ref, iex_ref, iin_ref, ref_ref, ext_ref,
+               idc_ref, ring_ref, Vo_ref, iexo_ref, iino_ref, refo_ref,
+               spk_ref, *, d_bins: int, n_lanes: int, prop: Propagators):
+    """Integrate against the just-delivered ring, then consume the slot."""
+    t_prev = meta_ref[0]
+    slot = jax.lax.rem(t_prev + 1, d_bins)
+    lanes = pl.dslice(0, n_lanes)
+    arr_ex = pl.load(ring_ref, (slot * 2, lanes))
+    arr_in = pl.load(ring_ref, (slot * 2 + 1, lanes))
+    in_ex = arr_ex + ext_ref[...]
+    Vo, iexo, iino, refo, spiked = _lif_math(
+        V_ref[...], iex_ref[...], iin_ref[...], ref_ref[...],
+        in_ex, arr_in, idc_ref[...], prop)
+    Vo_ref[...] = Vo
+    iexo_ref[...] = iexo
+    iino_ref[...] = iino
+    refo_ref[...] = refo
+    spk_ref[...] = spiked
+    zeros = jnp.zeros((n_lanes,), jnp.float32)
+    pl.store(ring_ref, (slot * 2, lanes), zeros)
+    pl.store(ring_ref, (slot * 2 + 1, lanes), zeros)
+
+
+def _kernel_static(ids_ref, meta_ref, tgt_ref, w_ref, db_ref, ring_in_ref,
+                   V_ref, iex_ref, iin_ref, ref_ref, ext_ref, idc_ref,
+                   ring_ref, Vo_ref, iexo_ref, iino_ref, refo_ref, spk_ref,
+                   *, d_bins: int, block_k: int, s_budget: int,
+                   n_lanes: int, prop: Propagators):
+    s = pl.program_id(0)
+    kb = pl.program_id(1)
+
+    @pl.when((s == 0) & (kb == 0))
+    def _init():
+        ring_ref[...] = ring_in_ref[...]
+
+    @pl.when(s < s_budget)
+    def _deliver():
+        _deliver_row(s, ids_ref, meta_ref, tgt_ref, w_ref, db_ref,
+                     ring_ref, d_bins=d_bins, block_k=block_k)
+
+    @pl.when((s == s_budget) & (kb == 0))
+    def _update():
+        _lif_phase(meta_ref, V_ref, iex_ref, iin_ref, ref_ref, ext_ref,
+                   idc_ref, ring_ref, Vo_ref, iexo_ref, iino_ref,
+                   refo_ref, spk_ref, d_bins=d_bins, n_lanes=n_lanes,
+                   prop=prop)
+
+
+def _kernel_plastic(ids_ref, meta_ref, tgt_ref, w_ref, db_ref, pmask_ref,
+                    ring_in_ref, V_ref, iex_ref, iin_ref, ref_ref,
+                    ext_ref, idc_ref, xpre_ref, xpost_ref, spkprev_ref,
+                    ring_ref, w_out_ref, Vo_ref, iexo_ref, iino_ref,
+                    refo_ref, spk_ref, xpreo_ref, xposto_ref,
+                    *, d_bins: int, block_k: int, s_budget: int,
+                    n_lanes: int, prop: Propagators, dep_coef: float,
+                    decay_p: float, decay_m: float):
+    s = pl.program_id(0)
+    kb = pl.program_id(1)
+
+    @pl.when((s == 0) & (kb == 0))
+    def _init():
+        ring_ref[...] = ring_in_ref[...]
+
+    @pl.when(s < s_budget)
+    def _deliver():
+        t_prev = meta_ref[0]
+        n_exc = meta_ref[1]
+        sid = ids_ref[s]
+        ch = jnp.where(sid >= n_exc, 1, 0).astype(jnp.int32)
+
+        def body(j, _):
+            tg = tgt_ref[0, j]
+            w = w_ref[0, j]
+            db = db_ref[0, j]
+            slot = jax.lax.rem(t_prev + db, d_bins)
+            ring_ref[slot * 2 + ch, tg] += w
+            # pair-STDP depression on the gathered tile while it's
+            # on-chip: same single-rounded coefficient as stdp_step
+            xp = xpost_ref[tg]
+            dw = jnp.where(pmask_ref[0, j], -(dep_coef * xp), 0.0)
+            w_out_ref[0, j] = w + dw
+            return 0
+
+        jax.lax.fori_loop(0, block_k, body, 0)
+
+    @pl.when((s == s_budget) & (kb == 0))
+    def _update():
+        _lif_phase(meta_ref, V_ref, iex_ref, iin_ref, ref_ref, ext_ref,
+                   idc_ref, ring_ref, Vo_ref, iexo_ref, iino_ref,
+                   refo_ref, spk_ref, d_bins=d_bins, n_lanes=n_lanes,
+                   prop=prop)
+        spkf = spkprev_ref[...]
+        xpreo_ref[...] = xpre_ref[...] * decay_p + spkf
+        xposto_ref[...] = xpost_ref[...] * decay_m + spkf
+
+
+def _pad_lanes(x, n_lanes):
+    return jnp.pad(x, (0, n_lanes - x.shape[0]))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "d_bins", "n_cols", "n", "n_exc", "prop", "block_k", "interpret"))
+def lif_deliver_pallas(ids, targets, weights, dbins, ring, V, I_ex, I_in,
+                       refrac, ext_ex, i_dc, t_prev, *, d_bins: int,
+                       n_cols: int, n: int, n_exc: int, prop: Propagators,
+                       block_k: int = 128, interpret: bool = False):
+    """One fused step: deliver ``ids`` at ring phase ``t_prev``, then
+    integrate step ``t_prev + 1``.
+
+    ``ids``[S] int32 in [0, N] (N = sentinel), ELL tables ``[N+1, K]``,
+    ``ring``[D, 2, n_cols] f32, state vectors [n] (n = n_cols - 1),
+    ``ext_ex``/``i_dc`` the pre-scaled external drive.  Returns
+    ``(ring', V', I_ex', I_in', refrac', spiked)``.
+    """
+    s_budget = ids.shape[0]
+    assert s_budget >= 1, "fused step needs spike_budget >= 1"
+    k = targets.shape[1]
+    k_pad = -(-k // block_k) * block_k
+    if k_pad != k:              # EllDelivery.prepare pre-pads; stay robust
+        n_sent = targets.shape[0] - 1
+        targets = jnp.pad(targets, ((0, 0), (0, k_pad - k)),
+                          constant_values=n_sent)
+        weights = jnp.pad(weights, ((0, 0), (0, k_pad - k)))
+        dbins = jnp.pad(dbins, ((0, 0), (0, k_pad - k)),
+                        constant_values=1)
+    n_lanes = -(-n_cols // 128) * 128
+    ring2 = jnp.pad(ring.reshape(2 * d_bins, n_cols),
+                    ((0, 0), (0, n_lanes - n_cols)))
+    meta = jnp.stack([jnp.asarray(t_prev, jnp.int32),
+                      jnp.full((), n_exc, jnp.int32)])
+    fvec = [_pad_lanes(x, n_lanes) for x in (V, I_ex, I_in)]
+    ivec = _pad_lanes(refrac, n_lanes)
+    dvec = [_pad_lanes(x, n_lanes) for x in (ext_ex, i_dc)]
+
+    last = s_budget - 1
+    row = pl.BlockSpec((1, block_k),
+                       lambda s, kb, ids, meta: (ids[jnp.minimum(s, last)],
+                                                 kb))
+    vec = pl.BlockSpec((n_lanes,), lambda s, kb, ids, meta: (0,))
+    full = pl.BlockSpec((2 * d_bins, n_lanes),
+                        lambda s, kb, ids, meta: (0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(s_budget + 1, k_pad // block_k),
+        in_specs=[row, row, row, full, vec, vec, vec, vec, vec, vec],
+        out_specs=[full, vec, vec, vec, vec, vec],
+    )
+    outs = pl.pallas_call(
+        functools.partial(_kernel_static, d_bins=d_bins, block_k=block_k,
+                          s_budget=s_budget, n_lanes=n_lanes, prop=prop),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((2 * d_bins, n_lanes), jnp.float32),
+            jax.ShapeDtypeStruct((n_lanes,), jnp.float32),
+            jax.ShapeDtypeStruct((n_lanes,), jnp.float32),
+            jax.ShapeDtypeStruct((n_lanes,), jnp.float32),
+            jax.ShapeDtypeStruct((n_lanes,), jnp.int32),
+            jax.ShapeDtypeStruct((n_lanes,), jnp.bool_),
+        ],
+        # input index 5 is the ring (indices count the 2 prefetch operands)
+        input_output_aliases={5: 0},
+        interpret=interpret,
+    )(ids, meta, targets, weights, dbins, ring2, *fvec, ivec, *dvec)
+    ring_out, Vo, iexo, iino, refo, spk = outs
+    ring_out = ring_out.reshape(d_bins, 2, n_lanes)[:, :, :n_cols]
+    return (ring_out, Vo[:n], iexo[:n], iino[:n], refo[:n], spk[:n])
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "d_bins", "n_cols", "n", "n_exc", "prop", "block_k", "interpret",
+    "dep_coef", "decay_p", "decay_m"))
+def lif_deliver_plastic_pallas(ids, targets, weights, dbins, pmask, ring,
+                               V, I_ex, I_in, refrac, ext_ex, i_dc,
+                               x_pre, x_post, spk_prev, t_prev, *,
+                               d_bins: int, n_cols: int, n: int,
+                               n_exc: int, prop: Propagators,
+                               dep_coef: float, decay_p: float,
+                               decay_m: float, block_k: int = 128,
+                               interpret: bool = False):
+    """Plastic fused step: static step + in-tile pair-STDP depression and
+    on-chip trace decay.
+
+    ``weights`` must be the *live* plastic weight table (ELL-padded view
+    of the flat plastic weights) and ``pmask`` its plastic-synapse mask,
+    both ``[N+1, K]``; ``spk_prev`` is ``spiked_prev`` as f32 (the trace
+    bump of the step whose spikes are being delivered).  Returns
+    ``(ring', weights', V', I_ex', I_in', refrac', spiked, x_pre',
+    x_post')`` — potentiation and clipping stay in XLA
+    (``repro.core.plasticity.stdp_pot_clip``).
+    """
+    s_budget = ids.shape[0]
+    assert s_budget >= 1, "fused step needs spike_budget >= 1"
+    k = targets.shape[1]
+    assert k % block_k == 0 and weights.shape[1] == k \
+        and pmask.shape[1] == k, "plastic fused step needs pre-padded ELL"
+    n_lanes = -(-n_cols // 128) * 128
+    ring2 = jnp.pad(ring.reshape(2 * d_bins, n_cols),
+                    ((0, 0), (0, n_lanes - n_cols)))
+    meta = jnp.stack([jnp.asarray(t_prev, jnp.int32),
+                      jnp.full((), n_exc, jnp.int32)])
+    fvec = [_pad_lanes(x, n_lanes) for x in (V, I_ex, I_in)]
+    ivec = _pad_lanes(refrac, n_lanes)
+    dvec = [_pad_lanes(x, n_lanes)
+            for x in (ext_ex, i_dc, x_pre, x_post, spk_prev)]
+
+    last = s_budget - 1
+    row = pl.BlockSpec((1, block_k),
+                       lambda s, kb, ids, meta: (ids[jnp.minimum(s, last)],
+                                                 kb))
+    vec = pl.BlockSpec((n_lanes,), lambda s, kb, ids, meta: (0,))
+    full = pl.BlockSpec((2 * d_bins, n_lanes),
+                        lambda s, kb, ids, meta: (0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(s_budget + 1, k // block_k),
+        in_specs=[row, row, row, row, full,
+                  vec, vec, vec, vec, vec, vec, vec, vec, vec],
+        out_specs=[full, row, vec, vec, vec, vec, vec, vec, vec],
+    )
+    outs = pl.pallas_call(
+        functools.partial(_kernel_plastic, d_bins=d_bins, block_k=block_k,
+                          s_budget=s_budget, n_lanes=n_lanes, prop=prop,
+                          dep_coef=dep_coef, decay_p=decay_p,
+                          decay_m=decay_m),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((2 * d_bins, n_lanes), jnp.float32),
+            jax.ShapeDtypeStruct(weights.shape, jnp.float32),
+            jax.ShapeDtypeStruct((n_lanes,), jnp.float32),
+            jax.ShapeDtypeStruct((n_lanes,), jnp.float32),
+            jax.ShapeDtypeStruct((n_lanes,), jnp.float32),
+            jax.ShapeDtypeStruct((n_lanes,), jnp.int32),
+            jax.ShapeDtypeStruct((n_lanes,), jnp.bool_),
+            jax.ShapeDtypeStruct((n_lanes,), jnp.float32),
+            jax.ShapeDtypeStruct((n_lanes,), jnp.float32),
+        ],
+        # ring -> ring', live weights -> depressed weights (input indices
+        # count the 2 prefetch operands)
+        input_output_aliases={6: 0, 3: 1},
+        interpret=interpret,
+    )(ids, meta, targets, weights, dbins, pmask, ring2, *fvec, ivec,
+      *dvec)
+    ring_out, w_out, Vo, iexo, iino, refo, spk, xpreo, xposto = outs
+    ring_out = ring_out.reshape(d_bins, 2, n_lanes)[:, :, :n_cols]
+    return (ring_out, w_out, Vo[:n], iexo[:n], iino[:n], refo[:n],
+            spk[:n], xpreo[:n], xposto[:n])

@@ -6,7 +6,9 @@ loop another 1/8).  This analyzer walks the call graph instead:
 
   * while ops carry ``known_trip_count`` in backend_config; a computation's
     execution count = sum over call sites of caller_count x trips,
-  * dot FLOPs  = 2 x |result| x |contracting dims|, scaled by count,
+  * dot FLOPs  = 2 x |result| x |contracting dims|, scaled by count;
+    elementwise FLOPs (reported separately) = 1 x |result| for the
+    arithmetic op set, counted inside fusion bodies too,
   * HBM bytes  = (result + operand bytes) of *top-level* ops (entry, while
     bodies, conditionals), scaled by count.  Ops inside fusion computations
     are excluded — the fusion op itself accounts for the HBM traffic, which
@@ -43,6 +45,20 @@ _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
 _SKIP_BYTES = {"parameter", "tuple", "get-tuple-element", "constant",
                "bitcast", "after-all", "opt-barrier", "partition-id"}
 
+#: elementwise arithmetic ops counted as 1 FLOP per result element (a
+#: roofline-grade estimate; transcendentals cost more on real hardware,
+#: but within an order of magnitude).  Matters for dot-free programs —
+#: a spiking-network step is elementwise + scatter, so the ``dot``-only
+#: count reads zero and the compute term vanishes from the roofline.
+_EW_FLOP_OPS = {
+    "add", "subtract", "multiply", "divide", "remainder", "power",
+    "maximum", "minimum", "clamp", "compare", "select",
+    "exponential", "exponential-minus-one", "log", "log-plus-one",
+    "tanh", "logistic", "sqrt", "rsqrt", "cbrt",
+    "negate", "abs", "sign", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "cosine", "sine", "atan2",
+}
+
 
 def _shape_bytes(type_str: str) -> int:
     total = 0
@@ -62,6 +78,19 @@ def _shape_dims(type_str: str):
     if not m:
         return []
     return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _shape_elems(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
 
 
 def _operand_names(line: str):
@@ -185,6 +214,7 @@ def analyze_hlo(hlo: str) -> dict:
             break
 
     flops = 0.0
+    ew_flops = 0.0
     hbm = 0.0
     coll = defaultdict(lambda: {"count": 0.0, "bytes": 0.0})
     coll_tags = defaultdict(float)
@@ -219,6 +249,10 @@ def analyze_hlo(hlo: str) -> dict:
                         if d and int(d) < len(lhs_dims):
                             contract *= lhs_dims[int(d)]
                 flops += mult * 2.0 * res * contract
+            # elementwise FLOPs are counted *everywhere* (fusion bodies
+            # included) — fusion reduces memory traffic, not arithmetic
+            if ins.op in _EW_FLOP_OPS:
+                ew_flops += mult * _shape_elems(ins.type_str)
             base_op = ins.op.replace("-start", "")
             if base_op in _COLLECTIVES:
                 b = _shape_bytes(ins.type_str)
@@ -249,6 +283,7 @@ def analyze_hlo(hlo: str) -> dict:
     top_tags = dict(sorted(coll_tags.items(), key=lambda kv: -kv[1])[:12])
     return {
         "flops_per_device": flops,
+        "elementwise_flops_per_device": ew_flops,
         "hbm_bytes_per_device": hbm,
         "collectives": {k: dict(v) for k, v in coll.items()},
         "collective_wire_bytes_per_device": sum(

@@ -182,6 +182,30 @@ def test_legacy_shims_warn(smoke_c):
         PhaseRunner(smoke_c, cfg)
 
 
+def test_kernel_flag_and_network_shims_warn(smoke_c):
+    """The KernelPolicy deprecation contract: the old per-op SimConfig
+    booleans and the Network.event/.dense compat views still work but
+    warn (pytest.ini silences these suite-wide; asserted here)."""
+    from repro.core.engine import SimConfig, prepare_network, \
+        resolve_sim_config
+
+    with pytest.warns(DeprecationWarning, match="SimConfig.kernels="):
+        cfg = resolve_sim_config(
+            SimConfig(spike_budget=64, use_lif_kernel=True), smoke_c)
+    assert cfg.kernels.lif == "pallas"        # flag folded into the policy
+    with pytest.warns(DeprecationWarning, match="SimConfig.kernels="):
+        cfg = resolve_sim_config(
+            SimConfig(spike_budget=64, use_deliver_kernel=True), smoke_c)
+    assert cfg.kernels.deliver == "pallas"
+
+    cfg = resolve_sim_config(SimConfig(spike_budget=64), smoke_c)
+    net = prepare_network(smoke_c, cfg)
+    with pytest.warns(DeprecationWarning, match="Network.event"):
+        assert net.event is net.tables
+    with pytest.warns(DeprecationWarning, match="Network.dense"):
+        assert net.dense is None
+
+
 def test_drive_shims_warn(smoke_c):
     """use_dc (whose comment contradicted its name) and SimConfig.bg_rate
     are deprecation shims mapping onto stimulus-registry entries."""

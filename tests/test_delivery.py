@@ -21,6 +21,7 @@ from repro.core import delivery as dlv
 from repro.core.connectivity import (build_connectome, dense_bytes_estimate,
                                      dense_delay_binned)
 from repro.core.engine import SimConfig, resolve_sim_config
+from repro.core.kernel_policy import KernelPolicy
 
 CFG = dataclasses.replace(SMOKE, t_presim=0.0)
 
@@ -79,8 +80,9 @@ def test_dense_layout_vs_kernel_flag_mismatch(tiny_c):
     gemm_tables = dlv.get_strategy("dense").prepare(
         c, SimConfig(strategy="dense"))
     ring = jnp.zeros((c.d_max_bins, 2, c.n_total + 1), jnp.float32)
-    kcfg = SimConfig(strategy="dense", use_deliver_kernel=True)
-    with pytest.raises(ValueError, match="use_deliver_kernel"):
+    kcfg = resolve_sim_config(SimConfig(
+        strategy="dense", kernels=KernelPolicy(deliver="pallas")), c)
+    with pytest.raises(ValueError, match="KernelPolicy"):
         dlv.get_strategy("dense").deliver(
             ring, gemm_tables, jnp.zeros(c.n_total, bool),
             jnp.asarray(0), c.n_exc, kcfg)
@@ -116,8 +118,10 @@ def _one_step_rings(c, budget=64, seed=0):
         tables = strat.prepare(c, scfg)
         r, ovf = strat.deliver(ring, tables, spiked, t, c.n_exc, scfg)
         out[name] = np.asarray(r)
-    # the kernel path of ell, forced off-TPU via use_deliver_kernel
-    kcfg = dataclasses.replace(cfg, strategy="ell", use_deliver_kernel=True)
+    # the kernel path of ell, forced off-TPU via the kernel policy
+    kcfg = resolve_sim_config(SimConfig(
+        spike_budget=budget, strategy="ell",
+        kernels=KernelPolicy(deliver="pallas")), c)
     strat = dlv.get_strategy("ell")
     r, _ = strat.deliver(ring, strat.prepare(c, kcfg), spiked, t,
                          c.n_exc, kcfg)
@@ -218,9 +222,9 @@ def test_ell_strategy_zero_spike_step_full_cycle(tiny_c):
     leaves the ring bit-identical (the sentinel rows scatter weight 0
     into the dump column only)."""
     c = tiny_c
-    cfg = dataclasses.replace(
-        resolve_sim_config(SimConfig(strategy="ell", spike_budget=32), c),
-        use_deliver_kernel=True)
+    cfg = resolve_sim_config(SimConfig(
+        strategy="ell", spike_budget=32,
+        kernels=KernelPolicy(deliver="pallas")), c)
     strat = dlv.get_strategy("ell")
     tables = strat.prepare(c, cfg)
     ring = jnp.zeros((c.d_max_bins, 2, c.n_total + 1), jnp.float32)

@@ -50,6 +50,20 @@ def test_collectives_counted_with_trips():
     assert ar["bytes"] == 8 * 16 * 4 * 2 * 10
 
 
+def test_elementwise_flops_counted_with_trips():
+    """tanh in the live scan body below is elementwise; on the synthetic
+    module the only _EW_FLOP_OPS instruction is... none — assert 0 there,
+    then pin trip-weighted counting on a module with an add in the body."""
+    assert analyze_hlo(SYNTH)["elementwise_flops_per_device"] == 0
+    synth_ew = SYNTH.replace(
+        "%ar = f32[8,16]{1,0} all-reduce(%dot.1), to_apply=%add",
+        "%s = f32[8,16]{1,0} add(%dot.1, %x)\n"
+        "  %ar = f32[8,16]{1,0} all-reduce(%s), to_apply=%add")
+    r = analyze_hlo(synth_ew)
+    # one add of 8x16 elements x 10 trips
+    assert r["elementwise_flops_per_device"] == 10 * 8 * 16
+
+
 def test_live_module_flops_match_manual():
     """Analyzer on a real compiled scan: flops ~= trips x per-iter matmul."""
     def f(x, w):

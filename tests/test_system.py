@@ -9,6 +9,7 @@ import numpy as np
 import pytest
 
 from repro.core import SimConfig, build_connectome, recording, simulate
+from repro.core.kernel_policy import KernelPolicy
 from repro.core.params import FULL_MEAN_RATES, POPULATIONS
 
 
@@ -76,7 +77,7 @@ def test_gated_pallas_delivery_matches_dense(tiny_connectome):
     key = jax.random.PRNGKey(6)
     cfg_d = SimConfig(strategy="dense", record="spikes")
     cfg_k = SimConfig(strategy="dense", record="spikes",
-                      use_deliver_kernel=True)
+                      kernels=KernelPolicy(deliver="pallas"))
     _, r1, _ = simulate(tiny_connectome, 3.0, cfg_d, key=key)
     _, r2, _ = simulate(tiny_connectome, 3.0, cfg_k, key=key)
     np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
@@ -86,7 +87,7 @@ def test_lif_kernel_engine_matches_reference(tiny_connectome):
     key = jax.random.PRNGKey(7)
     cfg_a = SimConfig(strategy="event", spike_budget=256, record="spikes")
     cfg_b = SimConfig(strategy="event", spike_budget=256, record="spikes",
-                      use_lif_kernel=True)
+                      kernels=KernelPolicy(lif="pallas"))
     _, r1, _ = simulate(tiny_connectome, 5.0, cfg_a, key=key)
     _, r2, _ = simulate(tiny_connectome, 5.0, cfg_b, key=key)
     np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
